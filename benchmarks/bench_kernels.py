@@ -1,0 +1,72 @@
+"""Kernel benchmarks: interpret-mode allclose vs oracle + us/call, and the
+XLA-reference path timing for context (kernels target TPU; interpret mode
+measures correctness, not TPU speed)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def bench_flash_attention() -> None:
+    b, s, h, kh, d = 1, 256, 4, 2, 64
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, kh, d))
+    v = jax.random.normal(ks[2], (b, s, kh, d))
+    out = ops.flash_attention(q, k, v, causal=True, block_q=128, block_kv=128)
+    want = ref.flash_attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+        causal=True).transpose(0, 2, 1, 3)
+    err = float(jnp.max(jnp.abs(out - want)))
+    dt = timeit(lambda: ops.flash_attention(q, k, v, causal=True), iters=5)
+    dt_ref = timeit(
+        lambda: ref.flash_attention_ref(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+            causal=True), iters=5)
+    emit("kernel/flash_attention_interp", dt, f"max_err={err:.2e};xla_ref_us={dt_ref * 1e6:.0f}")
+
+
+def bench_ssm_scan() -> None:
+    b, l, h, p, g, n = 1, 256, 4, 32, 1, 16
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (b, l, h, p))
+    dt_in = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    bm = jax.random.normal(ks[3], (b, l, g, n))
+    cm = jax.random.normal(ks[4], (b, l, g, n))
+    y, _ = ops.ssm_scan(x, dt_in, a, bm, cm, chunk=64)
+    yref, _ = ref.ssm_scan_ref(x, dt_in, a, jnp.repeat(bm, h, 2), jnp.repeat(cm, h, 2), chunk=64)
+    err = float(jnp.max(jnp.abs(y - yref)))
+    dt = timeit(lambda: ops.ssm_scan(x, dt_in, a, bm, cm, chunk=64), iters=5)
+    emit("kernel/ssm_scan_interp", dt, f"max_err={err:.2e}")
+
+
+def bench_mlstm_scan() -> None:
+    b, l, h, p = 1, 256, 2, 32
+    ks = jax.random.split(KEY, 5)
+    q = jax.random.normal(ks[0], (b, l, h, p))
+    k = jax.random.normal(ks[1], (b, l, h, p))
+    v = jax.random.normal(ks[2], (b, l, h, p))
+    il = jax.random.normal(ks[3], (b, l, h))
+    fl = jax.nn.log_sigmoid(jax.random.normal(ks[4], (b, l, h)) + 3.0)
+    hout, _ = ops.mlstm_scan(q, k, v, il, fl, chunk=64)
+    want = ref.mlstm_scan_ref(q, k, v, il, fl)
+    err = float(jnp.max(jnp.abs(hout - want)))
+    dt = timeit(lambda: ops.mlstm_scan(q, k, v, il, fl, chunk=64), iters=5)
+    emit("kernel/mlstm_scan_interp", dt, f"max_err={err:.2e}")
+
+
+def main() -> None:
+    bench_flash_attention()
+    bench_ssm_scan()
+    bench_mlstm_scan()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,192 @@
+"""NAS-layer benchmarks mirroring the paper's claims:
+
+  * sampler comparison (paper §III: Optuna-compatible optimization)
+  * search-space translation + dynamic model construction throughput
+    (paper §IV-C: models instantiated only after sampling)
+  * estimator fidelity: analytical FLOPs/params vs XLA compiled truth
+    (paper §V: cost estimators)
+  * end-to-end HIL pipeline latency breakdown (paper §VI: generators)
+  * pre-processing joint search benefit (paper §IV-E)
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core.builder import ModelBuilder
+from repro.core.space import parse_search_space
+from repro.core.translate import sample_architecture
+from repro.data.pipeline import SyntheticClassificationData
+from repro.evaluation import TrainedAccuracyEstimator
+from repro.hwgen.generator import HardwareManager, XLAGenerator
+from repro.search import (
+    GridSampler,
+    RandomSampler,
+    RegularizedEvolutionSampler,
+    Study,
+    TPESampler,
+)
+
+SPACE_YAML = """
+input: [4, 256]
+output: 6
+sequence:
+  - block: "features"
+    op_candidates: "conv-block"
+    type_repeat:
+      type: "vary_all"
+      depth: [1, 2, 3, 4]
+  - block: "head"
+    op_candidates: "linear"
+    linear:
+      width: [32, 64, 128]
+default_op_params:
+  conv1d:
+    kernel_size: [3, 5]
+    out_channels: [8, 16]
+    stride: [1, 2]
+composites:
+  conv-block:
+    sequence:
+      - block: "conv"
+        op_candidates: "conv1d"
+      - block: "pool"
+        op_candidates: ["maxpool", "identity"]
+"""
+
+
+def bench_samplers() -> None:
+    """Best objective value after N trials, per sampler (lower=better)."""
+    space = parse_search_space(SPACE_YAML)
+    builder = ModelBuilder(space.input_shape, space.output_dim)
+
+    def objective(trial):
+        arch = sample_architecture(space, trial)
+        m = builder.build(arch)
+        # synthetic hardware-cost surface: flops + param pressure
+        return m.flops / 1e6 + m.n_params / 1e4
+
+    for name, sampler in [
+        ("random", RandomSampler(seed=0)),
+        ("tpe", TPESampler(seed=0, n_startup=8)),
+        ("evolution", RegularizedEvolutionSampler(seed=0, population=12)),
+        ("grid", GridSampler(seed=0)),
+    ]:
+        t0 = time.perf_counter()
+        study = Study(sampler=sampler)
+        study.optimize(objective, 40)
+        dt = (time.perf_counter() - t0) / 40
+        emit(f"sampler/{name}", dt, f"best={study.best_trial.values[0]:.2f}")
+
+
+def bench_builder_throughput() -> None:
+    """sample+build latency (dynamic instantiation, paper §IV-C)."""
+    space = parse_search_space(SPACE_YAML)
+    builder = ModelBuilder(space.input_shape, space.output_dim)
+    study = Study(sampler=RandomSampler(seed=1))
+
+    def one():
+        trial = study.ask()
+        arch = sample_architecture(space, trial)
+        return builder.build(arch)
+
+    dt = timeit(one, warmup=3, iters=50)
+    emit("builder/sample+build", dt, f"models_per_s={1 / dt:.0f}")
+
+    dt_parse = timeit(lambda: parse_search_space(SPACE_YAML), warmup=2, iters=20)
+    emit("builder/yaml_parse", dt_parse, "")
+
+
+def bench_estimator_fidelity() -> None:
+    """Analytical FLOPs vs XLA cost_analysis ground truth (paper §V)."""
+    space = parse_search_space(SPACE_YAML)
+    builder = ModelBuilder(space.input_shape, space.output_dim)
+    study = Study(sampler=RandomSampler(seed=2))
+    gen = XLAGenerator("host_cpu")
+    rel_errs = []
+    t_gen = 0.0
+    n = 8
+    for _ in range(n):
+        arch = sample_architecture(space, study.ask())
+        m = builder.build(arch)
+        params = m.init(jax.random.PRNGKey(0))
+        x = jnp.zeros((1, 256, 4))
+        t0 = time.perf_counter()
+        artifact = gen.generate(m.apply, (params, x))
+        t_gen += time.perf_counter() - t0
+        if artifact.flops > 0 and m.flops > 0:
+            rel_errs.append(abs(artifact.flops - m.flops) / artifact.flops)
+    emit("estimator/flops_vs_xla", t_gen / n,
+         f"median_rel_err={np.median(rel_errs):.3f}")
+
+
+def bench_hil_pipeline() -> None:
+    """Generate vs benchmark latency per candidate (paper §VI mode 2)."""
+    space = parse_search_space(SPACE_YAML)
+    builder = ModelBuilder(space.input_shape, space.output_dim)
+    study = Study(sampler=RandomSampler(seed=3))
+    gen = XLAGenerator("host_cpu")
+    mgr = HardwareManager(warmup=1, iters=5)
+    arch = sample_architecture(space, study.ask())
+    m = builder.build(arch)
+    params = m.init(jax.random.PRNGKey(0))
+    x = jnp.zeros((8, 256, 4))
+
+    t0 = time.perf_counter()
+    artifact = gen.generate(m.apply, (params, x))
+    t_generate = time.perf_counter() - t0
+    t1 = time.perf_counter()
+    result = mgr.benchmark(artifact, (params, x))
+    t_bench = time.perf_counter() - t1
+    emit("hil/generate", t_generate, f"flops={artifact.flops:.0f}")
+    emit("hil/benchmark", t_bench, f"latency_us={result['latency_s'] * 1e6:.0f}")
+
+
+def bench_preprocessing_joint() -> None:
+    """Joint pre-processing+arch search vs arch-only (paper §IV-E)."""
+    base = SPACE_YAML
+    joint = SPACE_YAML + """
+preprocessing:
+  normalize:
+    kind: ["zscore", "minmax"]
+  downsample:
+    factor: [1, 2]
+"""
+    data = SyntheticClassificationData(n=240, length=256, channels=4, classes=6).split()
+    acc_est = TrainedAccuracyEstimator(steps=30, batch=32)
+
+    def run(yaml_text, seed):
+        space = parse_search_space(yaml_text)
+        builder = ModelBuilder(space.input_shape, space.output_dim)
+        study = Study(sampler=RandomSampler(seed=seed), directions=("maximize",))
+
+        def obj(trial):
+            arch = sample_architecture(space, trial)
+            m = builder.build(arch)
+            return acc_est.estimate(m, {"data": data})
+
+        study.optimize(obj, 6)
+        return study.best_trial.values[0]
+
+    t0 = time.perf_counter()
+    acc_base = run(base, 0)
+    acc_joint = run(joint, 0)
+    dt = time.perf_counter() - t0
+    emit("preprocess/joint_vs_base", dt / 12,
+         f"acc_base={acc_base:.3f};acc_joint={acc_joint:.3f}")
+
+
+def main() -> None:
+    bench_samplers()
+    bench_builder_throughput()
+    bench_estimator_fidelity()
+    bench_hil_pipeline()
+    bench_preprocessing_joint()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Shared benchmark helpers.  Output convention (one line per measurement):
+
+    name,us_per_call,derived
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+
+def timeit(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Median-ish wall time per call in seconds."""
+    import jax
+
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out) if hasattr(out, "block_until_ready") or out is not None else None
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    try:
+        jax.block_until_ready(out)
+    except Exception:
+        pass
+    return (time.perf_counter() - t0) / iters
+
+
+def emit(name: str, seconds: float, derived: str = "") -> None:
+    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)

@@ -1,0 +1,30 @@
+"""Benchmark harness: one section per paper claim.  Prints
+``name,us_per_call,derived`` CSV lines (see benchmarks/common.py).
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run nas kernels roofline
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    sections = sys.argv[1:] or ["nas", "kernels", "roofline"]
+    print("name,us_per_call,derived")
+    if "nas" in sections:
+        from benchmarks import bench_nas
+
+        bench_nas.main()
+    if "kernels" in sections:
+        from benchmarks import bench_kernels
+
+        bench_kernels.main()
+    if "roofline" in sections:
+        from benchmarks import bench_roofline
+
+        bench_roofline.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Architecture config registry: one module per assigned architecture."""
+from repro.configs.base import SHAPES, ArchConfig, ShapeCell, input_specs
+
+_ARCH_MODULES = (
+    "qwen3_1_7b",
+    "phi4_mini_3_8b",
+    "nemotron_4_340b",
+    "qwen1_5_4b",
+    "zamba2_2_7b",
+    "xlstm_1_3b",
+    "whisper_medium",
+    "dbrx_132b",
+    "arctic_480b",
+    "paligemma_3b",
+)
+
+ARCHS = {}
+for _m in _ARCH_MODULES:
+    mod = __import__(f"repro.configs.{_m}", fromlist=["ARCH"])
+    ARCHS[mod.ARCH.name] = mod.ARCH
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+__all__ = ["ARCHS", "ArchConfig", "SHAPES", "ShapeCell", "get_arch", "input_specs"]

@@ -1,0 +1,112 @@
+"""Architecture config protocol + the 4 assigned input-shape cells.
+
+Each ``configs/<arch>.py`` exposes ``ARCH: ArchConfig`` with:
+  * ``spec_fn(long_context)``  — the exact published configuration
+  * ``smoke_spec_fn()``        — reduced same-family config for CPU tests
+  * ``batch_kind``             — "lm" | "encdec" | "vlm" (input dict layout)
+  * ``supports_long_context``  — whether the ``long_500k`` decode cell runs
+    (sub-quadratic archs only; skips are documented in DESIGN.md)
+
+``input_specs`` builds weak-type-correct ShapeDtypeStruct stand-ins for
+every model input of a (arch x shape) cell — no device allocation, as
+required by the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.specs import ModelSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str  # "train" | "prefill" | "decode"
+    seq: int
+    batch: int
+    long_context: bool = False
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1, long_context=True),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | hybrid | ssm | audio | moe | vlm
+    spec_fn: Callable[..., ModelSpec]
+    smoke_spec_fn: Callable[[], ModelSpec]
+    batch_kind: str = "lm"
+    supports_long_context: bool = False
+    enc_context: int = 1500  # enc-dec: encoder frames available at decode
+    prefix_tokens: int = 256  # vlm: patch-embedding prefix length
+    source: str = ""
+
+    def spec(self, long_context: bool = False) -> ModelSpec:
+        try:
+            return self.spec_fn(long_context=long_context)
+        except TypeError:
+            return self.spec_fn()
+
+    def cell_supported(self, cell: ShapeCell) -> Tuple[bool, str]:
+        if cell.long_context and not self.supports_long_context:
+            return False, (
+                "long_500k requires sub-quadratic sequence mixing; "
+                f"{self.name} is a full-attention arch (skip per brief)"
+            )
+        return True, ""
+
+
+def _tok(b, s):
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def input_specs(arch: ArchConfig, cell: ShapeCell, spec: Optional[ModelSpec] = None):
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    Returns (batch_dict, batch_logical_axes) — axes feed the sharding
+    resolver for in_shardings.
+    """
+    spec = spec or arch.spec(long_context=cell.long_context)
+    b, s = cell.batch, cell.seq
+    d = spec.d_model
+    act = jnp.bfloat16
+
+    if cell.kind in ("train",):
+        batch = {"tokens": _tok(b, s), "labels": _tok(b, s)}
+        axes = {"tokens": ("batch", None), "labels": ("batch", None)}
+        if arch.batch_kind == "encdec":
+            batch["frames"] = jax.ShapeDtypeStruct((b, s, d), act)
+            axes["frames"] = ("batch", None, None)
+        if arch.batch_kind == "vlm":
+            batch["patch_embeds"] = jax.ShapeDtypeStruct((b, arch.prefix_tokens, d), act)
+            axes["patch_embeds"] = ("batch", None, None)
+        return batch, axes
+
+    if cell.kind == "prefill":
+        batch = {"tokens": _tok(b, s)}
+        axes = {"tokens": ("batch", None)}
+        if arch.batch_kind == "encdec":
+            batch["frames"] = jax.ShapeDtypeStruct((b, s, d), act)
+            axes["frames"] = ("batch", None, None)
+        if arch.batch_kind == "vlm":
+            batch["patch_embeds"] = jax.ShapeDtypeStruct((b, arch.prefix_tokens, d), act)
+            axes["patch_embeds"] = ("batch", None, None)
+        return batch, axes
+
+    if cell.kind == "decode":
+        # one new token against a cache of cell.seq
+        batch = {"tokens": _tok(b, 1)}
+        axes = {"tokens": ("batch", None)}
+        return batch, axes
+
+    raise ValueError(cell.kind)

@@ -1,0 +1,135 @@
+"""ModelBuilder: ArchitectureIR -> executable JAX model (paper §IV-C).
+
+Modules are instantiated only after the sampler has fixed all values.
+The builder walks the layer IR, asks each registered LayerBuilder for an
+instantiated ``BuiltLayer`` (which includes shape inference), and inserts
+adapter modules from the transition registry wherever consecutive layers
+disagree on data format — so heterogeneous (conv / attention / linear)
+architectures compose without per-architecture glue code.
+
+The result is a :class:`BuiltModel` with pure ``init``/``apply`` functions
+(jit-able, shardable — the same functional convention as the LM substrate)
+plus analytical cost metadata used by the evaluation API.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.preprocess import build_preprocessing
+from repro.core.registry import BuiltLayer, get_layer_builder, get_transition
+from repro.core.translate import ArchitectureIR
+
+
+class BuildError(ValueError):
+    pass
+
+
+@dataclasses.dataclass
+class BuiltModel:
+    layers: List[BuiltLayer]
+    input_shape: Tuple[int, ...]
+    output_dim: int
+    arch: ArchitectureIR
+    preprocess: Optional[Callable[[Any], Any]] = None
+
+    # -- functional interface -------------------------------------------------
+
+    def init_annotated(self, key):
+        """Params with logical-axis annotations (P-tree) for sharding."""
+        keys = jax.random.split(key, max(1, len(self.layers)))
+        return {f"layer_{i}": l.init(k) for i, (l, k) in enumerate(zip(self.layers, keys))}
+
+    def init(self, key):
+        from repro.nn.types import split
+
+        values, _ = split(self.init_annotated(key))
+        return values
+
+    def apply(self, params, x):
+        if self.preprocess is not None:
+            x = self.preprocess(x)
+        for i, layer in enumerate(self.layers):
+            x = layer.apply(params[f"layer_{i}"], x)
+        return x
+
+    # -- analytical costs ------------------------------------------------------
+
+    @property
+    def flops(self) -> int:
+        return sum(l.flops for l in self.layers)
+
+    @property
+    def n_params(self) -> int:
+        return sum(l.n_params for l in self.layers)
+
+    def summary(self) -> str:
+        rows = [f"input  {self.input_shape}"]
+        for l in self.layers:
+            rows.append(f"{l.name:<28} -> {l.out_shape} [{l.out_format}] "
+                        f"flops={l.flops:,} params={l.n_params:,}")
+        return "\n".join(rows)
+
+
+class ModelBuilder:
+    """Builds executable models from sampled architecture IR."""
+
+    def __init__(self, input_shape: Tuple[int, ...], output_dim: int,
+                 input_format: str = "BLC", ensure_head: bool = True):
+        self.input_shape = tuple(int(s) for s in input_shape)
+        self.output_dim = int(output_dim)
+        self.input_format = input_format
+        self.ensure_head = ensure_head
+
+    def build(self, arch: ArchitectureIR) -> BuiltModel:
+        # paper: (length, channels) YAML order is [channels, length]
+        if self.input_format == "BLC" and len(self.input_shape) == 2:
+            c, l = self.input_shape
+            shape: Tuple[int, ...] = (l, c)
+        else:
+            shape = self.input_shape
+        fmt = self.input_format
+        layers: List[BuiltLayer] = []
+
+        pre_fn, pre_out_shape = build_preprocessing(arch.preprocessing, shape)
+        shape = pre_out_shape
+
+        n = len(arch.layers)
+        for i, layer_ir in enumerate(arch.layers):
+            builder = get_layer_builder(layer_ir.op)
+            is_last = self.ensure_head and (i == n - 1)
+            # adapter insertion when formats disagree
+            if builder.in_format not in ("any", fmt):
+                adapter = get_transition(fmt, builder.in_format)(shape)
+                layers.append(adapter)
+                shape, fmt = adapter.out_shape, adapter.out_format
+            built = builder.build(
+                dict(layer_ir.params), shape, fmt,
+                is_last=is_last, output_dim=self.output_dim,
+            )
+            layers.append(built)
+            shape, fmt = built.out_shape, built.out_format
+
+        if self.ensure_head and (fmt != "BF" or shape != (self.output_dim,)):
+            # guarantee a classifier head of the requested output dim
+            if fmt != "BF":
+                adapter = get_transition(fmt, "BF")(shape)
+                layers.append(adapter)
+                shape, fmt = adapter.out_shape, adapter.out_format
+            if shape != (self.output_dim,):
+                head = get_layer_builder("linear").build(
+                    {}, shape, fmt, is_last=True, output_dim=self.output_dim
+                )
+                layers.append(head)
+                shape = head.out_shape
+
+        return BuiltModel(
+            layers=layers,
+            input_shape=self.input_shape,
+            output_dim=self.output_dim,
+            arch=arch,
+            preprocess=pre_fn,
+        )

@@ -1,0 +1,121 @@
+"""Pre-processing design space (paper §IV-E).
+
+Five searchable stages over (B, L, C) sensor streams, jointly sampled with
+the architecture so the whole signal path is optimized end-to-end:
+
+  * ``filter``      — windowed-sinc low/high-pass FIR (cutoff, taps, kind)
+  * ``downsample``  — integer-factor decimation
+  * ``window``      — sequential windowing: fixed-offset crop of length W
+  * ``event_window``— event-based windowing: crop centred on the maximum
+                      short-time energy (the "event")
+  * ``normalize``   — zscore | minmax | none
+
+The deployed stream system applies windowing continuously; during NAS each
+example contributes one window (documented simplification).  All stages
+are pure jnp -> they compile into the same XLA program as the model, so
+hardware-in-the-loop latency measurements include the pre-processing cost
+— the paper's end-to-end claim.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Shape = Tuple[int, ...]
+
+
+def _sinc_kernel(taps: int, cutoff: float, kind: str) -> jnp.ndarray:
+    """Windowed-sinc FIR kernel.  cutoff in (0, 0.5) of sampling rate."""
+    m = taps - 1
+    n = jnp.arange(taps) - m / 2.0
+    h = 2 * cutoff * jnp.sinc(2 * cutoff * n)
+    # Hamming window
+    w = 0.54 - 0.46 * jnp.cos(2 * math.pi * jnp.arange(taps) / m)
+    h = h * w
+    h = h / jnp.sum(h)
+    if kind == "highpass":
+        delta = jnp.zeros(taps).at[m // 2].set(1.0)
+        h = delta - h
+    return h
+
+
+def _apply_fir(x, kernel):
+    """Depthwise 'SAME' FIR along L.  x: (B, L, C)."""
+    k = kernel[:, None, None] * jnp.eye(x.shape[-1])[None]
+    return jax.lax.conv_general_dilated(
+        x, k, window_strides=(1,), padding="SAME",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+    )
+
+
+def build_stage(cfg: Dict[str, Any], shape: Shape) -> Tuple[Callable, Shape]:
+    l, c = shape
+    stage = cfg["stage"]
+    if stage == "filter":
+        taps = int(cfg.get("taps", 31))
+        cutoff = float(cfg.get("cutoff", 0.25))
+        kind = str(cfg.get("kind", "lowpass"))
+        kernel = _sinc_kernel(taps, cutoff, kind)
+        return (lambda x: _apply_fir(x, kernel)), (l, c)
+    if stage == "downsample":
+        factor = max(1, int(cfg.get("factor", 1)))
+        out_l = (l + factor - 1) // factor
+        return (lambda x: x[:, ::factor]), (out_l, c)
+    if stage == "window":
+        w = min(int(cfg.get("size", l)), l)
+        off = min(int(cfg.get("offset", 0)), l - w)
+        return (lambda x: x[:, off : off + w]), (w, c)
+    if stage == "event_window":
+        w = min(int(cfg.get("size", l)), l)
+        energy_w = min(int(cfg.get("energy_window", 16)), l)
+
+        def fn(x):
+            energy = jax.lax.reduce_window(
+                jnp.sum(x.astype(jnp.float32) ** 2, axis=-1),
+                0.0, jax.lax.add, (1, energy_w), (1, 1), "VALID",
+            )
+            centre = jnp.argmax(energy, axis=1) + energy_w // 2
+            start = jnp.clip(centre - w // 2, 0, x.shape[1] - w)
+
+            def crop(xi, s):
+                return jax.lax.dynamic_slice_in_dim(xi, s, w, axis=0)
+
+            return jax.vmap(crop)(x, start)
+
+        return fn, (w, c)
+    if stage == "normalize":
+        kind = str(cfg.get("kind", "zscore"))
+        if kind == "minmax":
+            def fn(x):
+                lo = jnp.min(x, axis=1, keepdims=True)
+                hi = jnp.max(x, axis=1, keepdims=True)
+                return (x - lo) / jnp.maximum(hi - lo, 1e-6)
+        elif kind == "zscore":
+            def fn(x):
+                mu = jnp.mean(x, axis=1, keepdims=True)
+                sd = jnp.std(x, axis=1, keepdims=True)
+                return (x - mu) / jnp.maximum(sd, 1e-6)
+        else:
+            fn = lambda x: x
+        return fn, (l, c)
+    raise ValueError(f"unknown pre-processing stage {stage!r}")
+
+
+def build_preprocessing(stages: List[Dict[str, Any]], shape: Shape):
+    """Compose sampled stages -> (callable | None, out_shape)."""
+    if not stages:
+        return None, shape
+    fns = []
+    for cfg in stages:
+        fn, shape = build_stage(cfg, shape)
+        fns.append(fn)
+
+    def pipeline(x):
+        for f in fns:
+            x = f(x)
+        return x
+
+    return pipeline, shape

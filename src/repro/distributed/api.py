@@ -1,0 +1,47 @@
+"""Lightweight distribution hooks usable from model code.
+
+Model code calls :func:`constrain` with *logical* activation axes; when a
+sharding context (rules + mesh) is active this becomes
+``lax.with_sharding_constraint``, otherwise it is a no-op — so the same
+model code runs single-device (smoke tests) and pod-scale (dry-run)
+unchanged.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+
+_state = threading.local()
+
+
+def current_rules():
+    return getattr(_state, "rules", None)
+
+
+def current_mesh():
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def sharding_context(mesh, rules):
+    """Activate (mesh, rules) for :func:`constrain` within the block."""
+    prev = (current_mesh(), current_rules())
+    _state.mesh, _state.rules = mesh, rules
+    try:
+        yield
+    finally:
+        _state.mesh, _state.rules = prev
+
+
+def constrain(x, logical_axes: Tuple[Optional[str], ...]):
+    """Attach a sharding constraint for activation ``x`` if context active."""
+    mesh, rules = current_mesh(), current_rules()
+    if mesh is None or rules is None:
+        return x
+    from repro.distributed.sharding import logical_to_sharding
+
+    sharding = logical_to_sharding(logical_axes, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, sharding)

@@ -1,0 +1,119 @@
+"""Logical-axis sharding resolver.
+
+Parameters and activations carry *logical* axis names ("embed", "mlp",
+"heads", "vocab", "experts", "batch", "kv_seq", ...).  A rule-set maps each
+logical name to zero or more mesh axes.  The resolver applies the rules
+with a **divisibility fallback**: if a dimension is not divisible by the
+product of its mapped mesh axes, the mapping is dropped (replicated) for
+that dimension — e.g. kv_heads=8 cannot shard over model=16 and silently
+falls back, which is what makes every (arch x shape) cell lower cleanly.
+
+Default policy = FSDP + TP:
+  * weights: ``embed -> data`` (FSDP), ``mlp/heads/kv_heads/vocab/experts
+    -> model`` (TP/EP) — 340B/480B-param archs fit 16 GiB/chip.
+  * activations: ``batch -> (pod, data)``; decode KV caches shard their
+    sequence dim over ``model`` (sequence-sharded KV, Pope et al.) so a
+    32k-context cache fits.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.nn.types import P as Param, is_annotated
+
+
+Rules = Dict[str, Tuple[str, ...]]
+
+
+def default_rules(mesh: Mesh) -> Rules:
+    has_pod = "pod" in mesh.axis_names
+    batch = ("pod", "data") if has_pod else ("data",)
+    return {
+        "batch": batch,
+        "embed": ("data",),
+        "mlp": ("model",),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "vocab": ("model",),
+        "experts": ("model",),
+        "expert_mlp": ("data",),  # 2D expert sharding (MoEConfig.shard_ff)
+        "kv_seq": ("model",),
+        # attention-internal context parallelism: q's seq dim shards over
+        # model so score panels are 1/|model| per chip and no head_dim
+        # contraction sharding (-> giant score all-reduces) can be chosen
+        "act_seq": ("model",),
+        "layers": (),
+    }
+
+
+def _axis_size(mesh: Mesh, names: Sequence[str]) -> int:
+    size = 1
+    for n in names:
+        size *= mesh.shape[n]
+    return size
+
+
+def partition_spec(
+    logical_axes: Sequence[Optional[str]],
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: Rules,
+) -> PartitionSpec:
+    """Map logical axes -> PartitionSpec honoring divisibility + uniqueness."""
+    used: set = set()
+    out = []
+    for dim, name in zip(shape, logical_axes):
+        if name is None:
+            out.append(None)
+            continue
+        mesh_axes = tuple(a for a in rules.get(name, ()) if a in mesh.axis_names)
+        mesh_axes = tuple(a for a in mesh_axes if a not in used)
+        if not mesh_axes or dim % _axis_size(mesh, mesh_axes) != 0:
+            out.append(None)
+            continue
+        used.update(mesh_axes)
+        out.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
+    return PartitionSpec(*out)
+
+
+def logical_to_sharding(logical_axes, shape, mesh: Mesh, rules: Rules) -> NamedSharding:
+    if len(logical_axes) < len(shape):
+        # leading stacked dims (e.g. the scan "layers" axis) default to None
+        logical_axes = (None,) * (len(shape) - len(logical_axes)) + tuple(logical_axes)
+    return NamedSharding(mesh, partition_spec(logical_axes, shape, mesh, rules))
+
+
+def params_shardings(annotated_params, mesh: Mesh, rules: Optional[Rules] = None):
+    """P-tree -> matching tree of NamedShardings (same treedef as values)."""
+    rules = rules or default_rules(mesh)
+
+    def one(p):
+        if isinstance(p, Param):
+            return logical_to_sharding(p.axes, p.value.shape, mesh, rules)
+        return NamedSharding(mesh, PartitionSpec())
+
+    return jax.tree_util.tree_map(one, annotated_params, is_leaf=is_annotated)
+
+
+def _is_axes_leaf(x) -> bool:
+    return x is None or (
+        isinstance(x, tuple) and all(e is None or isinstance(e, str) for e in x)
+    )
+
+
+def shapes_shardings_from_axes(values, axes_tree, mesh: Mesh, rules: Optional[Rules] = None):
+    """(values, axes) trees -> shardings tree.  Values may be
+    ShapeDtypeStructs (dry-run) or arrays.  ``axes_tree`` leaves are the
+    per-dim logical-axis tuples produced by ``repro.nn.types.split``."""
+    rules = rules or default_rules(mesh)
+
+    def one(a, v):
+        if a is None:
+            return NamedSharding(mesh, PartitionSpec())
+        return logical_to_sharding(a, v.shape, mesh, rules)
+
+    return jax.tree_util.tree_map(one, axes_tree, values, is_leaf=_is_axes_leaf)

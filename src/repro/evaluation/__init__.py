@@ -1,0 +1,14 @@
+from repro.evaluation.api import (
+    CriteriaRunner,
+    Estimator,
+    OptimizationCriteria,
+    weighted_sum,
+)
+from repro.evaluation.estimators import (
+    ActivationMemoryEstimator,
+    CompiledLatencyEstimator,
+    CompiledMemoryEstimator,
+    FlopsEstimator,
+    ParamCountEstimator,
+    TrainedAccuracyEstimator,
+)

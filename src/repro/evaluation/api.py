@@ -1,0 +1,113 @@
+"""Evaluation API (paper §V): estimators + optimization criteria.
+
+Estimators are independent of the NAS workflow; each produces one scalar
+for a candidate.  They can be used directly as study objectives or
+registered as :class:`OptimizationCriteria` with a kind:
+
+  * ``objective``        — enters the scalarized score
+  * ``soft_constraint``  — enters the score via hinge penalty above target
+  * ``hard_constraint``  — checked FIRST; violation terminates the trial
+                           early (staged evaluation)
+
+Scalarization defaults to a weighted sum; a custom aggregator can be
+injected (paper: "custom optimization aggregation functions").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+from repro.search.study import HardConstraintViolated
+
+
+class Estimator:
+    """Base class: estimate(candidate, context) -> float."""
+
+    name: str = "estimator"
+
+    def estimate(self, candidate: Any, context: Optional[Dict] = None) -> float:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass
+class OptimizationCriteria:
+    estimator: Estimator
+    kind: str = "objective"  # objective | soft_constraint | hard_constraint
+    direction: str = "minimize"  # objectives only
+    weight: float = 1.0
+    limit: Optional[float] = None  # constraints: threshold
+
+    def __post_init__(self):
+        assert self.kind in ("objective", "soft_constraint", "hard_constraint"), self.kind
+        if self.kind != "objective" and self.limit is None:
+            raise ValueError(f"{self.kind} requires a limit")
+
+
+def weighted_sum(values: Dict[str, float], criteria: List[OptimizationCriteria]) -> float:
+    """Default scalarization: weighted sum; soft constraints add a hinge
+    penalty proportional to relative violation."""
+    score = 0.0
+    by_name = {c.estimator.name: c for c in criteria}
+    for name, v in values.items():
+        c = by_name[name]
+        if c.kind == "objective":
+            score += c.weight * (v if c.direction == "minimize" else -v)
+        elif c.kind == "soft_constraint":
+            score += c.weight * max(0.0, (v - c.limit) / max(abs(c.limit), 1e-12))
+    return score
+
+
+class CriteriaRunner:
+    """Staged evaluation: hard constraints first (early termination),
+    then objectives + soft constraints, then scalarization."""
+
+    def __init__(
+        self,
+        criteria: Sequence[OptimizationCriteria],
+        aggregator: Callable[[Dict[str, float], List[OptimizationCriteria]], float] = weighted_sum,
+    ):
+        self.criteria = list(criteria)
+        self.aggregator = aggregator
+
+    def evaluate(self, candidate: Any, context: Optional[Dict] = None, trial=None) -> float:
+        context = context or {}
+        values: Dict[str, float] = {}
+        # stage 1: hard constraints
+        for c in self.criteria:
+            if c.kind != "hard_constraint":
+                continue
+            v = float(c.estimator.estimate(candidate, context))
+            values[c.estimator.name] = v
+            if trial is not None:
+                trial.set_user_attr(c.estimator.name, v)
+            if v > c.limit:
+                raise HardConstraintViolated(c.estimator.name, v, c.limit)
+        # stage 2: objectives + soft constraints
+        for c in self.criteria:
+            if c.kind == "hard_constraint":
+                continue
+            v = float(c.estimator.estimate(candidate, context))
+            values[c.estimator.name] = v
+            if trial is not None:
+                trial.set_user_attr(c.estimator.name, v)
+        return self.aggregator(values, self.criteria)
+
+    def evaluate_multi(self, candidate: Any, context: Optional[Dict] = None, trial=None):
+        """Multi-objective form: returns the tuple of objective values
+        (hard constraints still terminate early)."""
+        context = context or {}
+        for c in self.criteria:
+            if c.kind == "hard_constraint":
+                v = float(c.estimator.estimate(candidate, context))
+                if trial is not None:
+                    trial.set_user_attr(c.estimator.name, v)
+                if v > c.limit:
+                    raise HardConstraintViolated(c.estimator.name, v, c.limit)
+        out = []
+        for c in self.criteria:
+            if c.kind == "objective":
+                v = float(c.estimator.estimate(candidate, context))
+                if trial is not None:
+                    trial.set_user_attr(c.estimator.name, v)
+                out.append(v)
+        return tuple(out)

@@ -1,0 +1,149 @@
+"""Cost + performance estimators (paper §V).
+
+Cost estimators:
+  * ParamCountEstimator / FlopsEstimator / ActivationMemoryEstimator —
+    analytical, from BuiltModel metadata (fast, no compilation)
+  * CompiledLatencyEstimator — hardware-in-the-loop: generates the
+    artifact for a TargetSpec via the XLA generator and returns measured
+    wall-clock (host backend) or roofline-modelled latency (TPU targets)
+  * CompiledMemoryEstimator — per-device peak bytes from memory_analysis
+
+Performance estimators:
+  * TrainedAccuracyEstimator — trains the candidate briefly on a provided
+    dataset and returns validation accuracy (supports trial.report/pruning)
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.builder import BuiltModel
+from repro.evaluation.api import Estimator
+from repro.hwgen.generator import HardwareManager, XLAGenerator
+from repro.hwgen.targets import TargetSpec
+
+
+class ParamCountEstimator(Estimator):
+    name = "n_params"
+
+    def estimate(self, candidate: BuiltModel, context=None) -> float:
+        return float(candidate.n_params)
+
+
+class FlopsEstimator(Estimator):
+    name = "flops"
+
+    def estimate(self, candidate: BuiltModel, context=None) -> float:
+        return float(candidate.flops)
+
+
+class ActivationMemoryEstimator(Estimator):
+    """Analytical activation footprint: max layer output size (batch 1)."""
+
+    name = "activation_bytes"
+    bytes_per_el = 4
+
+    def estimate(self, candidate: BuiltModel, context=None) -> float:
+        peak = max((math.prod(l.out_shape) for l in candidate.layers), default=0)
+        return float(peak * self.bytes_per_el)
+
+
+class CompiledLatencyEstimator(Estimator):
+    """Hardware-in-the-loop latency via the generator pipeline (paper §VI
+    mode 2).  Results are cached by architecture signature."""
+
+    name = "latency_s"
+
+    def __init__(self, target: TargetSpec | str, batch: int = 1, manager: Optional[HardwareManager] = None):
+        self.generator = XLAGenerator(target)
+        self.manager = manager or HardwareManager()
+        self.batch = batch
+        self._cache: Dict[str, float] = {}
+
+    def estimate(self, candidate: BuiltModel, context=None) -> float:
+        sig = candidate.arch.signature() if candidate.arch else str(id(candidate))
+        if sig in self._cache:
+            return self._cache[sig]
+        l, c = candidate.input_shape[-1], candidate.input_shape[0]
+        x = jnp.zeros((self.batch, l, c), jnp.float32)
+        params = candidate.init(jax.random.PRNGKey(0))
+        artifact = self.generator.generate(candidate.apply, (params, x))
+        result = self.manager.benchmark(artifact, (params, x))
+        latency = result["latency_s"]
+        self._cache[sig] = latency
+        return latency
+
+
+class CompiledMemoryEstimator(Estimator):
+    name = "peak_bytes"
+
+    def __init__(self, target: TargetSpec | str, batch: int = 1):
+        self.generator = XLAGenerator(target)
+        self.batch = batch
+
+    def estimate(self, candidate: BuiltModel, context=None) -> float:
+        l, c = candidate.input_shape[-1], candidate.input_shape[0]
+        x = jnp.zeros((self.batch, l, c), jnp.float32)
+        params = candidate.init(jax.random.PRNGKey(0))
+        artifact = self.generator.generate(candidate.apply, (params, x))
+        return float(artifact.memory.get("peak_bytes_per_device", 0))
+
+
+class TrainedAccuracyEstimator(Estimator):
+    """Short-budget training + validation accuracy (maximize).
+
+    context/data: {"x_train", "y_train", "x_val", "y_val"}.  Reports
+    intermediate accuracy to the trial for pruning when provided.
+    """
+
+    name = "val_accuracy"
+
+    def __init__(self, steps: int = 60, batch: int = 32, lr: float = 1e-3,
+                 report_every: int = 20):
+        self.steps = steps
+        self.batch = batch
+        self.lr = lr
+        self.report_every = report_every
+
+    def estimate(self, candidate: BuiltModel, context=None) -> float:
+        data = (context or {}).get("data")
+        assert data is not None, "TrainedAccuracyEstimator needs context['data']"
+        trial = (context or {}).get("trial")
+        x_train, y_train = data["x_train"], data["y_train"]
+        x_val, y_val = data["x_val"], data["y_val"]
+        params = candidate.init(jax.random.PRNGKey(0))
+
+        def loss_fn(p, xb, yb):
+            logits = candidate.apply(p, xb)
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, yb[:, None], axis=-1)[:, 0]
+            return jnp.mean(logz - gold)
+
+        @jax.jit
+        def step(p, xb, yb):
+            loss, g = jax.value_and_grad(loss_fn)(p, xb, yb)
+            p = jax.tree_util.tree_map(lambda w, gw: w - self.lr * gw, p, g)
+            return p, loss
+
+        @jax.jit
+        def accuracy(p, xb, yb):
+            pred = jnp.argmax(candidate.apply(p, xb), axis=-1)
+            return jnp.mean((pred == yb).astype(jnp.float32))
+
+        rng = np.random.default_rng(0)
+        n = x_train.shape[0]
+        for i in range(self.steps):
+            idx = rng.integers(0, n, self.batch)
+            params, _ = step(params, x_train[idx], y_train[idx])
+            if trial is not None and (i + 1) % self.report_every == 0:
+                acc = float(accuracy(params, x_val, y_val))
+                trial.report(i + 1, -acc)  # studies minimize by default
+                if trial.should_prune():
+                    from repro.search.study import TrialPruned
+
+                    raise TrialPruned()
+        return float(accuracy(params, x_val, y_val))

@@ -1,0 +1,71 @@
+"""MODEL_FLOPS = 6*N*D accounting (dense) / 6*N_active*D (MoE).
+
+``N`` counts matmul-participating parameters: embeddings and learned
+positional tables are excluded (gather, not matmul), the LM head is
+included (tied heads therefore add the embed matrix back once).  MoE
+expert weights are scaled by top_k/n_experts (+ capacity slack is real
+compute but excluded from the *model* flops definition — the gap shows up
+in the useful-ratio column instead, which is the point of that column).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm import LM
+from repro.models.specs import ModelSpec
+from repro.nn.types import split
+
+
+def active_matmul_params(spec: ModelSpec) -> int:
+    """Parameters participating in per-token matmuls, MoE-scaled."""
+    model = LM(spec)
+    annotated = jax.eval_shape(
+        functools.partial(model.init, dtype=jnp.bfloat16), jax.random.PRNGKey(0)
+    )
+    values, _ = split(annotated)
+    flat, _ = jax.tree_util.tree_flatten_with_path(values)
+
+    # locate MoE sub-blocks: (segment name, sub index) -> top_k/n_experts
+    moe_scale = {}
+    for seg in model.segments:
+        for i, sub in enumerate(seg.spec.subs):
+            if sub.kind == "moe":
+                moe_scale[(seg.name, f"sub_{i}")] = sub.cfg.top_k / sub.cfg.n_experts
+
+    active = 0
+    for path, leaf in flat:
+        keys = [str(getattr(p, "key", "")) for p in path]
+        n = int(leaf.size)
+        if keys[0] == "pos_embed":
+            continue
+        if keys[0] == "embed":
+            if spec.tie_embeddings:
+                active += n  # used once as the LM head matmul
+            continue
+        scale = 1.0
+        if len(keys) >= 2 and (keys[0], keys[1]) in moe_scale:
+            # expert tensors have an experts dim; router + dense residual
+            # within the moe params are always active
+            if keys[-1] in ("w_up", "w_gate", "w_down") and "dense" not in keys:
+                scale = moe_scale[(keys[0], keys[1])]
+        active += int(n * scale)
+    return active
+
+
+def model_flops(spec: ModelSpec, kind: str, batch: int, seq: int) -> float:
+    """Global MODEL_FLOPS for one step of the given cell kind."""
+    n = active_matmul_params(spec)
+    if kind == "train":
+        tokens = batch * seq
+        return 6.0 * n * tokens
+    if kind == "prefill":
+        tokens = batch * seq
+        return 2.0 * n * tokens
+    if kind == "decode":
+        tokens = batch * 1
+        return 2.0 * n * tokens
+    raise ValueError(kind)

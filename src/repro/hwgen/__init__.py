@@ -1,0 +1,4 @@
+from repro.hwgen.generator import Artifact, HardwareManager, XLAGenerator
+from repro.hwgen.hlo_analysis import parse_collectives, total_collective_bytes
+from repro.hwgen.roofline import RooflineReport, roofline_from_record, roofline_terms
+from repro.hwgen.targets import HOST_CPU, TARGETS, TPU_V5E, ChipSpec, TargetSpec, get_target

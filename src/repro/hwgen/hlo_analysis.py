@@ -1,0 +1,182 @@
+"""HLO text analysis: collective-communication byte accounting.
+
+``cost_analysis()`` does not expose collective bytes, so we parse the
+optimized (post-SPMD-partitioning) HLO and sum the operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+— the inputs to the §Roofline collective term.
+
+Two subtleties:
+  * operands are printed as names only -> pass 1 builds a name->bytes map
+    from definition sites;
+  * ``lax.scan`` lowers to ``while`` whose body is printed once -> we
+    recover trip counts from the loop-condition constants and multiply
+    each computation's collective bytes by its (possibly nested) trip
+    multiplier.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(
+    r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]"
+)
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_COMP_HDR_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->\s*.*\{\s*$")
+_WHILE_RE = re.compile(
+    r"while\(.*?\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)"
+)
+_CONST_INT_RE = re.compile(r"\b[su](?:8|16|32|64)\[\]\s+constant\((\d+)\)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _first_paren_group(s: str) -> str:
+    start = s.find("(")
+    if start < 0:
+        return ""
+    depth = 0
+    for i in range(start, len(s)):
+        if s[i] == "(":
+            depth += 1
+        elif s[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return s[start + 1 : i]
+    return s[start + 1 :]
+
+
+def _split_computations(text: str) -> Dict[str, List[str]]:
+    """computation name -> its body lines."""
+    comps: Dict[str, List[str]] = {}
+    current = None
+    for line in text.splitlines():
+        m = _COMP_HDR_RE.match(line)
+        if m and "{" in line:
+            current = m.group(1)
+            comps[current] = []
+            continue
+        if current is not None:
+            if line.strip() == "}":
+                current = None
+                continue
+            comps[current].append(line)
+    return comps
+
+
+def _collective_kind(rhs: str):
+    for kind in _COLLECTIVES:
+        # match "<kind>(" or "<kind>-start(" as the opcode token
+        if re.search(rf"\b{kind}(?:-start)?\(", rhs):
+            if f"{kind}-done" in rhs:
+                return None
+            return kind
+    return None
+
+
+def analyze_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """{kind: {count, bytes}} with while-trip-count multipliers applied."""
+    comps = _split_computations(hlo_text)
+
+    # pass 1: name -> output bytes (first shape token on the rhs)
+    name_bytes: Dict[str, int] = {}
+    for lines in comps.values():
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            name, rhs = m.groups()
+            shapes = _SHAPE_RE.findall(rhs.split("(")[0] + "(")
+            if not shapes:
+                shapes = _SHAPE_RE.findall(rhs)
+                shapes = shapes[:1]
+            name_bytes[name] = sum(_shape_bytes(d, dims) for d, dims in shapes)
+
+    # pass 2: while nesting -> per-computation multiplier
+    trip_of_comp: Dict[str, int] = {}
+    located: List[Tuple[str, str, str]] = []  # (parent_comp, cond, body)
+    for cname, lines in comps.items():
+        for line in lines:
+            w = _WHILE_RE.search(line)
+            if w:
+                located.append((cname, w.group(1), w.group(2)))
+
+    def cond_trip(cond_name: str, depth: int = 0) -> int:
+        ints = []
+        for line in comps.get(cond_name, ()):  # constants in the condition
+            ints += [int(x) for x in _CONST_INT_RE.findall(line)]
+            if depth < 2:  # comparisons may live in called fusions
+                for callee in re.findall(r"calls=%?([\w.\-]+)", line):
+                    t = cond_trip(callee, depth + 1)
+                    if t > 1:
+                        ints.append(t)
+        return max(ints) if ints else 1
+
+    mult: Dict[str, int] = {c: 1 for c in comps}
+    # iterate to fixpoint for nesting (bounded by nesting depth)
+    for _ in range(8):
+        changed = False
+        for parent, cond, body in located:
+            m = mult.get(parent, 1) * max(1, cond_trip(cond))
+            for target in (body, cond):
+                if mult.get(target, 1) != m:
+                    mult[target] = m
+                    changed = True
+        if not changed:
+            break
+
+    # pass 3: per-computation collective bytes x multiplier
+    out = {k: {"count": 0.0, "bytes": 0.0} for k in _COLLECTIVES}
+    for cname, lines in comps.items():
+        m = mult.get(cname, 1)
+        for line in lines:
+            d = _DEF_RE.match(line)
+            if not d:
+                continue
+            rhs = d.group(2)
+            kind = _collective_kind(rhs)
+            if kind is None:
+                continue
+            operands = _first_paren_group(rhs[rhs.find(kind):] if kind in rhs else rhs)
+            names = re.findall(r"%([\w.\-]+)", operands)
+            nbytes = sum(name_bytes.get(n, 0) for n in names)
+            if nbytes == 0:
+                # operands may be printed with inline shapes in some versions
+                nbytes = sum(_shape_bytes(t, dims) for t, dims in _SHAPE_RE.findall(operands))
+            out[kind]["count"] += m
+            out[kind]["bytes"] += m * nbytes
+    return out
+
+
+# Backwards-compatible name used by the dry-run
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    return analyze_collectives(hlo_text)
+
+
+def total_collective_bytes(stats: Dict[str, Dict[str, float]]) -> int:
+    return int(sum(v["bytes"] for v in stats.values()))
+
+
+def count_op(hlo_text: str, opcode: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opcode)}\(", hlo_text))

@@ -1,0 +1,90 @@
+"""Hardware target specifications (the TPU analogue of the paper's
+Raspberry Pi / Pico / FPGA backend descriptors).
+
+A TargetSpec bundles chip constants (for the roofline cost model) with a
+mesh recipe and backend capabilities (for the reflection API, paper §VI).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    name: str
+    peak_flops_bf16: float  # FLOP/s
+    hbm_bandwidth: float  # B/s
+    ici_bandwidth: float  # B/s per link
+    hbm_bytes: int
+    vmem_bytes: int = 128 * 1024 * 1024
+
+
+TPU_V5E = ChipSpec(
+    name="tpu_v5e",
+    peak_flops_bf16=197e12,
+    hbm_bandwidth=819e9,
+    ici_bandwidth=50e9,
+    hbm_bytes=16 * 1024 ** 3,
+)
+
+HOST_CPU = ChipSpec(
+    name="host_cpu",
+    peak_flops_bf16=1e11,  # nominal; host backend measures wall-clock instead
+    hbm_bandwidth=20e9,
+    ici_bandwidth=1e9,
+    hbm_bytes=32 * 1024 ** 3,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TargetSpec:
+    name: str
+    chip: ChipSpec
+    mesh_shape: Tuple[int, ...]
+    mesh_axes: Tuple[str, ...]
+    # reflection API (paper §VI): capability set consulted by the
+    # ModelBuilder so only backend-supported ops are sampled
+    supported_ops: frozenset = frozenset()
+    supports_pallas: bool = False
+    measurement: str = "roofline"  # "roofline" | "wallclock"
+
+    @property
+    def n_chips(self) -> int:
+        n = 1
+        for s in self.mesh_shape:
+            n *= s
+        return n
+
+
+_COMMON_OPS = frozenset({
+    "linear", "conv1d", "maxpool", "avgpool", "identity", "global_avg_pool",
+    "layernorm", "attention",
+})
+
+TARGETS: Dict[str, TargetSpec] = {
+    "tpu_v5e_pod": TargetSpec(
+        name="tpu_v5e_pod", chip=TPU_V5E,
+        mesh_shape=(16, 16), mesh_axes=("data", "model"),
+        supported_ops=_COMMON_OPS, supports_pallas=True,
+        measurement="roofline",
+    ),
+    "tpu_v5e_2pod": TargetSpec(
+        name="tpu_v5e_2pod", chip=TPU_V5E,
+        mesh_shape=(2, 16, 16), mesh_axes=("pod", "data", "model"),
+        supported_ops=_COMMON_OPS, supports_pallas=True,
+        measurement="roofline",
+    ),
+    "host_cpu": TargetSpec(
+        name="host_cpu", chip=HOST_CPU,
+        mesh_shape=(1, 1), mesh_axes=("data", "model"),
+        supported_ops=_COMMON_OPS, supports_pallas=False,
+        measurement="wallclock",
+    ),
+}
+
+
+def get_target(name: str) -> TargetSpec:
+    if name not in TARGETS:
+        raise KeyError(f"unknown target {name!r}; available: {sorted(TARGETS)}")
+    return TARGETS[name]

@@ -1,0 +1,138 @@
+"""Blockwise causal GQA flash attention for TPU (Pallas).
+
+TPU adaptation of the GPU flash-attention pattern: instead of warp-level
+softmax reductions, the kernel tiles (q_block x kv_block) score panels
+through VMEM and carries the online-softmax state (m, l, acc) in VMEM
+scratch across the *sequential* innermost grid dimension (TPU grids
+execute the trailing axis in order, which replaces the GPU's explicit
+loop over KV).  Block sizes default to 128 to match the MXU's 128x128
+systolic tile and the 8x128 VREG lanes.
+
+Supports grouped-query attention natively: the kv BlockSpec index map
+folds the q-head -> kv-head mapping (no KV repetition is materialized).
+Optional sliding-window masking handles the zamba2 long-context regime.
+
+Grid: (batch, q_heads, n_q_blocks, n_kv_blocks)   [last dim sequential]
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref, k_ref, v_ref,  # inputs
+    o_ref,  # outputs
+    acc_ref, m_ref, l_ref,  # scratch
+    *,
+    scale: float,
+    causal: bool,
+    window,
+    block_q: int,
+    block_kv: int,
+    n_kv_blocks: int,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (bQ, d)
+    k = k_ref[0, 0].astype(jnp.float32)  # (bK, d)
+    v = v_ref[0, 0].astype(jnp.float32)  # (bK, d)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (bQ, bK)
+
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
+    k_pos = ik * block_kv + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
+    mask = jnp.ones((block_q, block_kv), jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, axis=1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # fully-masked panels keep m == NEG_INF; mask p explicitly so
+    # exp(NEG_INF - NEG_INF) = 1 rows contribute nothing
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0, :, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(
+    q, k, v, *, causal=True, window=None, scale=None,
+    block_q=128, block_kv=128, interpret=False,
+):
+    """q: (B, H, S, D); k/v: (B, KH, T, D) with H % KH == 0.
+
+    Returns (B, H, S, D).  S must divide block_q, T block_kv (ops.py pads).
+    """
+    b, h, s, d = q.shape
+    kh, t = k.shape[1], k.shape[2]
+    assert h % kh == 0, (h, kh)
+    group = h // kh
+    assert s % block_q == 0 and t % block_kv == 0, (s, t, block_q, block_kv)
+    scale = scale if scale is not None else d ** -0.5
+    n_q = s // block_q
+    n_kv = t // block_kv
+
+    grid = (b, h, n_q, n_kv)
+    kernel = functools.partial(
+        _attn_kernel,
+        scale=scale,
+        causal=causal,
+        window=window,
+        block_q=block_q,
+        block_kv=block_kv,
+        n_kv_blocks=n_kv,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, block_kv, d), lambda ib, ih, iq, ik, g=group: (ib, ih // g, ik, 0)),
+            pl.BlockSpec((1, 1, block_kv, d), lambda ib, ih, iq, ik, g=group: (ib, ih // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        scratch_shapes=[
+            _vmem((block_q, d), jnp.float32),
+            _vmem((block_q,), jnp.float32),
+            _vmem((block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)

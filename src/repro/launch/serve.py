@@ -1,0 +1,80 @@
+"""Batched serving driver: prefill + decode loop with KV/state caches.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
+        --batch 4 --prompt-len 32 --gen 32
+
+Implements continuous batched greedy decoding against preallocated
+caches; the same ``decode`` step the dry-run lowers at 32k/500k contexts.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models.lm import LM
+from repro.nn.types import split
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="qwen3-1.7b")
+    p.add_argument("--smoke", action="store_true")
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--prompt-len", type=int, default=32)
+    p.add_argument("--gen", type=int, default=32)
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args(argv)
+
+    arch = get_arch(args.arch)
+    spec = arch.smoke_spec_fn() if args.smoke else arch.spec()
+    model = LM(spec)
+    params, _ = split(model.init(jax.random.PRNGKey(0), dtype=jnp.float32))
+
+    rng = np.random.default_rng(args.seed)
+    prompts = rng.integers(0, spec.vocab, (args.batch, args.prompt_len)).astype(np.int32)
+    max_seq = args.prompt_len + args.gen
+
+    decode = jax.jit(model.decode, donate_argnums=(1,))
+
+    # prefill by teacher-forcing the prompt through the decode path so the
+    # cache is exact (batched serving uses the full prefill kernel; this
+    # driver demonstrates cache correctness end to end)
+    t0 = time.time()
+    cache = model.init_cache(params, args.batch, max_seq, dtype=jnp.float32)
+    logits = None
+    for t in range(args.prompt_len):
+        logits, cache = decode(params, cache, prompts[:, t : t + 1], t)
+    prefill_s = time.time() - t0
+
+    # greedy decode
+    t1 = time.time()
+    tokens = [jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)]
+    for i in range(args.gen - 1):
+        logits, cache = decode(params, cache, tokens[-1], args.prompt_len + i)
+        tokens.append(jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32))
+    out = jnp.concatenate(tokens, axis=1)
+    jax.block_until_ready(out)
+    decode_s = time.time() - t1
+
+    result = {
+        "arch": spec.name,
+        "batch": args.batch,
+        "generated_shape": list(out.shape),
+        "prefill_s": round(prefill_s, 3),
+        "decode_s": round(decode_s, 3),
+        "decode_tok_per_s": round(args.batch * (args.gen - 1) / max(decode_s, 1e-9), 1),
+        "sample": out[0, :8].tolist(),
+    }
+    print(json.dumps(result))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

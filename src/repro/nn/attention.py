@@ -1,0 +1,314 @@
+"""Grouped-query attention with qk-norm, RoPE, sliding windows and KV caches.
+
+Three entry points:
+  * ``attention_init``    -- parameters
+  * ``attention_apply``   -- full-sequence (training / prefill / encoder /
+                             cross-attention) attention
+  * ``attention_decode``  -- single-token decode against a preallocated
+                             KV cache (in-place ``.at[].set`` update)
+
+The sequence-mixing math is grouped (no materialized KV repetition): q is
+reshaped to (batch, seq, kv_heads, group, d_head) so the einsum contracts
+directly against the grouped KV, which keeps HLO FLOPs/bytes at the GQA
+level rather than the MHA level.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import initializers as init
+from repro.nn.rope import apply_rope
+from repro.nn.types import P
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: Optional[int] = None
+    use_bias: bool = False
+    qk_norm: bool = False
+    rope: bool = True
+    rope_theta: float = 10000.0
+    causal: bool = True
+    window: Optional[int] = None  # sliding-window size (None = full)
+    impl: str = "xla"  # "xla" | "xla_chunked" | "pallas"
+    softmax_scale: Optional[float] = None
+    # cost-variant accounting: unroll the chunked-attention KV scan so
+    # HloCostAnalysis sees every chunk (see launch/dryrun.py)
+    scan_unroll: bool = False
+    kv_chunk: int = 1024  # xla_chunked block size (bigger = fewer carry rewrites)
+    # context-parallel q + replicated kv in full-seq attention (see
+    # _project_qkv docstring); enabled by the "seq_shard" dry-run variant
+    seq_shard: bool = False
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head if self.d_head is not None else self.d_model // self.n_heads
+
+    @property
+    def group(self) -> int:
+        assert self.n_heads % self.n_kv_heads == 0
+        return self.n_heads // self.n_kv_heads
+
+    @property
+    def scale(self) -> float:
+        return (
+            self.softmax_scale
+            if self.softmax_scale is not None
+            else self.head_dim ** -0.5
+        )
+
+
+def attention_init(cfg: AttentionConfig, key, dtype=jnp.float32):
+    dh = cfg.head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    params = {
+        "wq": P(init.scaled_normal(kq, (cfg.d_model, cfg.n_heads * dh), dtype), ("embed", "heads")),
+        "wk": P(init.scaled_normal(kk, (cfg.d_model, cfg.n_kv_heads * dh), dtype), ("embed", "kv_heads")),
+        "wv": P(init.scaled_normal(kv, (cfg.d_model, cfg.n_kv_heads * dh), dtype), ("embed", "kv_heads")),
+        "wo": P(init.scaled_normal(ko, (cfg.n_heads * dh, cfg.d_model), dtype, fan_in=cfg.n_heads * dh), ("heads", "embed")),
+    }
+    if cfg.use_bias:
+        params["bq"] = P(jnp.zeros((cfg.n_heads * dh,), dtype), ("heads",))
+        params["bk"] = P(jnp.zeros((cfg.n_kv_heads * dh,), dtype), ("kv_heads",))
+        params["bv"] = P(jnp.zeros((cfg.n_kv_heads * dh,), dtype), ("kv_heads",))
+    if cfg.qk_norm:
+        params["q_norm"] = P(jnp.ones((dh,), dtype), (None,))
+        params["k_norm"] = P(jnp.ones((dh,), dtype), (None,))
+    return params
+
+
+def _headwise_rmsnorm(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * (var + eps) ** -0.5 * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _project_qkv(params, cfg: AttentionConfig, x, kv_x, positions, kv_positions,
+                 constrain_full_seq: bool = False):
+    """Shared projection path. Returns q:(B,S,H,Dh), k/v:(B,T,K,Dh).
+
+    constrain_full_seq (full-sequence attention only): pins q to
+    sequence-sharded ("act_seq" -> model axis) and k/v to replicated
+    heads.  Without this, GSPMD can slide the fused-head-projection
+    sharding onto the head_dim when n_heads doesn't divide the model axis
+    (e.g. 56 heads on 16 chips) and then all-reduces the full O(S^2)
+    score tensors — observed 896 GiB ARs on arctic-480b/prefill_32k.
+    """
+    from repro.distributed.api import constrain
+
+    b, s, _ = x.shape
+    dh = cfg.head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"])
+    k = jnp.einsum("bsd,dh->bsh", kv_x, params["wk"])
+    v = jnp.einsum("bsd,dh->bsh", kv_x, params["wv"])
+    if cfg.use_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    t = kv_x.shape[1]
+    q = q.reshape(b, s, cfg.n_heads, dh)
+    k = k.reshape(b, t, cfg.n_kv_heads, dh)
+    v = v.reshape(b, t, cfg.n_kv_heads, dh)
+    if constrain_full_seq:
+        q = constrain(q, ("batch", "act_seq", None, None))
+        k = constrain(k, ("batch", None, None, None))
+        v = constrain(v, ("batch", None, None, None))
+    if cfg.qk_norm:
+        q = _headwise_rmsnorm(q, params["q_norm"])
+        k = _headwise_rmsnorm(k, params["k_norm"])
+    if cfg.rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, kv_positions, cfg.rope_theta)
+    return q, k, v
+
+
+def chunked_attention(q, k, v, scale, *, causal=True, window=None, kv_chunk=1024,
+                      q_offset=0, unroll=False):
+    """Flash-style attention in pure JAX: lax.scan over KV chunks with an
+    online softmax — O(S * kv_chunk) score memory instead of O(S^2), and
+    GSPMD-shardable (used by the dry-run's optimized configs, where the
+    Pallas kernel cannot lower on the CPU host platform).
+
+    q: (B,S,H,Dh); k/v: (B,T,K,Dh).  Returns (B,S,H,Dh).
+    """
+    b, s, h, dh = q.shape
+    t, kheads = k.shape[1], k.shape[2]
+    g = h // kheads
+    nchunks = t // kv_chunk
+    assert t % kv_chunk == 0, (t, kv_chunk)
+    qg = q.reshape(b, s, kheads, g, dh)
+    q_pos = (jnp.arange(s) + q_offset)[:, None]
+
+    kc = k.reshape(b, nchunks, kv_chunk, kheads, dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nchunks, kv_chunk, kheads, dh).transpose(1, 0, 2, 3, 4)
+
+    def body(carry, inp):
+        m_prev, l_prev, acc = carry
+        idx, k_blk, v_blk = inp
+        scores = jnp.einsum("bskgd,btkd->bkgst", qg, k_blk).astype(jnp.float32) * scale
+        k_pos = idx * kv_chunk + jnp.arange(kv_chunk)[None, :]
+        mask = jnp.ones((s, kv_chunk), bool)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        m_cur = jnp.max(scores, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(scores - m_new[..., None])
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgst,btkd->bkgsd", p.astype(v_blk.dtype), v_blk
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, kheads, g, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kheads, g, s), jnp.float32)
+    acc0 = jnp.zeros((b, kheads, g, s, dh), jnp.float32)
+    # unroll=True is used by the dry-run cost variant: HloCostAnalysis
+    # counts while bodies once, so the KV loop must be visible.
+    (m_f, l_f, acc), _ = jax.lax.scan(body, (m0, l0, acc0),
+                                      (jnp.arange(nchunks), kc, vc),
+                                      unroll=nchunks if unroll else 1)
+    out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, s, h, dh).astype(q.dtype)
+
+
+def grouped_attention(q, k, v, mask, scale):
+    """Core GQA soft-attention.
+
+    q: (B,S,H,Dh), k/v: (B,T,K,Dh), mask: broadcastable to (B,K,G,S,T).
+    Returns (B,S,H,Dh).
+    """
+    b, s, h, dh = q.shape
+    kheads = k.shape[2]
+    g = h // kheads
+    qg = q.reshape(b, s, kheads, g, dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32) * scale
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, s, h, dh)
+
+
+def make_mask(s, t, causal, window, q_offset=0):
+    """(1,1,1,S,T) boolean attention mask."""
+    qi = jnp.arange(s)[:, None] + q_offset
+    kj = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= kj <= qi
+    if window is not None:
+        mask &= kj > qi - window
+    return mask[None, None, None]
+
+
+def attention_apply(
+    params,
+    cfg: AttentionConfig,
+    x,
+    positions=None,
+    kv_x=None,
+    kv_positions=None,
+    mask=None,
+):
+    """Full-sequence attention.  ``kv_x`` enables cross-attention."""
+    b, s, _ = x.shape
+    cross = kv_x is not None
+    if kv_x is None:
+        kv_x = x
+    if positions is None:
+        positions = jnp.arange(s)[None]
+    if kv_positions is None:
+        kv_positions = jnp.arange(kv_x.shape[1])[None]
+    q, k, v = _project_qkv(params, cfg, x, kv_x, positions, kv_positions,
+                           constrain_full_seq=cfg.seq_shard and not cross)
+    if mask is None:
+        causal = cfg.causal and not cross
+        mask = make_mask(s, kv_x.shape[1], causal, None if cross else cfg.window)
+    if cfg.impl == "pallas" and not cross:
+        from repro.kernels import ops as kops
+
+        out = kops.flash_attention(
+            q, k, v, causal=cfg.causal, window=cfg.window, scale=cfg.scale
+        )
+    elif cfg.impl == "xla_chunked" and not cross:
+        kv_chunk = min(cfg.kv_chunk, kv_x.shape[1])
+        while kv_x.shape[1] % kv_chunk:
+            kv_chunk //= 2
+        out = chunked_attention(
+            q, k, v, cfg.scale, causal=cfg.causal, window=cfg.window,
+            kv_chunk=max(kv_chunk, 1), unroll=cfg.scan_unroll,
+        )
+    else:
+        out = grouped_attention(q, k, v, mask, cfg.scale)
+    out = out.reshape(b, s, cfg.n_heads * cfg.head_dim)
+    return jnp.einsum("bsh,hd->bsd", out, params["wo"])
+
+
+def init_kv_cache(cfg: AttentionConfig, batch, max_seq, dtype=jnp.bfloat16):
+    shape = (batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def precompute_cross_kv(params, cfg: AttentionConfig, enc_out, dtype=jnp.bfloat16):
+    """Project encoder output once; reused for every decode step."""
+    b, t, _ = enc_out.shape
+    k = jnp.einsum("bsd,dh->bsh", enc_out, params["wk"])
+    v = jnp.einsum("bsd,dh->bsh", enc_out, params["wv"])
+    if cfg.use_bias:
+        k, v = k + params["bk"], v + params["bv"]
+    dh = cfg.head_dim
+    return {
+        "k": k.reshape(b, t, cfg.n_kv_heads, dh).astype(dtype),
+        "v": v.reshape(b, t, cfg.n_kv_heads, dh).astype(dtype),
+    }
+
+
+def cross_attention_cached(params, cfg: AttentionConfig, x, cache):
+    """Decode-time cross-attention against a precomputed cross-KV cache."""
+    b, s, _ = x.shape
+    dh = cfg.head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"])
+    if cfg.use_bias:
+        q = q + params["bq"]
+    q = q.reshape(b, s, cfg.n_heads, dh)
+    if cfg.qk_norm:
+        q = _headwise_rmsnorm(q, params["q_norm"])
+    t = cache["k"].shape[1]
+    mask = jnp.ones((1, 1, 1, s, t), bool)
+    out = grouped_attention(q, cache["k"].astype(q.dtype), cache["v"].astype(q.dtype), mask, cfg.scale)
+    out = out.reshape(b, s, cfg.n_heads * dh)
+    return jnp.einsum("bsh,hd->bsd", out, params["wo"])
+
+
+def attention_decode(params, cfg: AttentionConfig, x, cache, pos):
+    """One-token decode.  x: (B,1,d_model); pos: scalar int32 (same for batch).
+
+    Updates ``cache`` in place (functionally) and attends to positions
+    ``<= pos`` (within the sliding window when configured).
+    """
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(params, cfg, x, x, positions, positions)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), pos, axis=1)
+    t = k_cache.shape[1]
+    kj = jnp.arange(t)
+    valid = kj <= pos
+    if cfg.window is not None:
+        valid &= kj > pos - cfg.window
+    mask = valid[None, None, None, None, :]  # (1,1,1,1,T)
+    out = grouped_attention(q, k_cache.astype(q.dtype), v_cache.astype(q.dtype), mask, cfg.scale)
+    out = out.reshape(b, 1, cfg.n_heads * cfg.head_dim)
+    y = jnp.einsum("bsh,hd->bsd", out, params["wo"])
+    return y, {"k": k_cache, "v": v_cache}

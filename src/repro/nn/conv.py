@@ -1,0 +1,81 @@
+"""1-D convolution / pooling primitives (channels-last: (B, L, C)).
+
+Used by the paper-native NAS search spaces (1-D convolutional classifiers
+over sensor streams) and by tests.  LM frontends for audio/vision are
+stubs per the assignment brief.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.nn import initializers as init
+from repro.nn.types import P
+
+
+def conv1d_init(key, in_ch, out_ch, kernel_size, dtype=jnp.float32, use_bias=True):
+    kw, kb = jax.random.split(key)
+    params = {
+        "w": P(
+            init.scaled_normal(kw, (kernel_size, in_ch, out_ch), dtype, fan_in=kernel_size * in_ch),
+            (None, None, "mlp"),
+        )
+    }
+    if use_bias:
+        params["b"] = P(jnp.zeros((out_ch,), dtype), ("mlp",))
+    return params
+
+
+def conv1d_apply(params, x, stride=1, padding="SAME"):
+    """x: (B, L, C_in) -> (B, L', C_out)."""
+    y = lax.conv_general_dilated(
+        x,
+        params["w"],
+        window_strides=(stride,),
+        padding=padding,
+        dimension_numbers=("NWC", "WIO", "NWC"),
+    )
+    if "b" in params:
+        y = y + params["b"]
+    return y
+
+
+def conv1d_out_len(l, kernel_size, stride, padding="SAME"):
+    if padding == "SAME":
+        return -(-l // stride)
+    return (l - kernel_size) // stride + 1
+
+
+def maxpool1d(x, window=2, stride=None):
+    stride = stride or window
+    return lax.reduce_window(
+        x,
+        -jnp.inf,
+        lax.max,
+        window_dimensions=(1, window, 1),
+        window_strides=(1, stride, 1),
+        padding="VALID",
+    )
+
+
+def avgpool1d(x, window=2, stride=None):
+    stride = stride or window
+    summed = lax.reduce_window(
+        x,
+        0.0,
+        lax.add,
+        window_dimensions=(1, window, 1),
+        window_strides=(1, stride, 1),
+        padding="VALID",
+    )
+    return summed / window
+
+
+def pool_out_len(l, window, stride=None):
+    stride = stride or window
+    return (l - window) // stride + 1
+
+
+def global_avg_pool(x):
+    return jnp.mean(x, axis=1)

@@ -1,0 +1,24 @@
+"""Weight initializers (pure functions of a PRNG key)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def normal(key, shape, dtype=jnp.float32, stddev=0.02):
+    return (jax.random.normal(key, shape) * stddev).astype(dtype)
+
+
+def scaled_normal(key, shape, dtype=jnp.float32, fan_in=None):
+    """Truncated-normal scaled by 1/sqrt(fan_in) (default: first dim)."""
+    fan = fan_in if fan_in is not None else shape[0]
+    std = (1.0 / max(1, fan)) ** 0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape) * std).astype(dtype)
+
+
+def zeros(_key, shape, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype)
+
+
+def ones(_key, shape, dtype=jnp.float32):
+    return jnp.ones(shape, dtype)

@@ -1,0 +1,63 @@
+"""Feed-forward blocks: SwiGLU / GELU / squared-ReLU / ReLU variants."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import initializers as init
+from repro.nn.types import P
+
+
+def squared_relu(x):
+    r = jax.nn.relu(x)
+    return r * r
+
+
+ACTIVATIONS = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "relu": jax.nn.relu,
+    "squared_relu": squared_relu,
+    "identity": lambda x: x,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPConfig:
+    d_model: int
+    d_ff: int
+    activation: str = "silu"
+    gated: bool = True  # SwiGLU-style gate when True
+    use_bias: bool = False
+
+
+def mlp_init(cfg: MLPConfig, key, dtype=jnp.float32):
+    kg, ku, kd = jax.random.split(key, 3)
+    params = {
+        "w_up": P(init.scaled_normal(ku, (cfg.d_model, cfg.d_ff), dtype), ("embed", "mlp")),
+        "w_down": P(init.scaled_normal(kd, (cfg.d_ff, cfg.d_model), dtype, fan_in=cfg.d_ff), ("mlp", "embed")),
+    }
+    if cfg.gated:
+        params["w_gate"] = P(init.scaled_normal(kg, (cfg.d_model, cfg.d_ff), dtype), ("embed", "mlp"))
+    if cfg.use_bias:
+        params["b_up"] = P(jnp.zeros((cfg.d_ff,), dtype), ("mlp",))
+        params["b_down"] = P(jnp.zeros((cfg.d_model,), dtype), ("embed",))
+    return params
+
+
+def mlp_apply(params, cfg: MLPConfig, x):
+    act = ACTIVATIONS[cfg.activation]
+    up = jnp.einsum("bsd,df->bsf", x, params["w_up"])
+    if cfg.use_bias:
+        up = up + params["b_up"]
+    if cfg.gated:
+        gate = act(jnp.einsum("bsd,df->bsf", x, params["w_gate"]))
+        h = gate * up
+    else:
+        h = act(up)
+    out = jnp.einsum("bsf,fd->bsd", h, params["w_down"])
+    if cfg.use_bias:
+        out = out + params["b_down"]
+    return out

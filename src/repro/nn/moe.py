@@ -1,0 +1,185 @@
+"""Mixture-of-Experts feed-forward with token-choice top-k routing.
+
+Dispatch is *gather-based*: instead of scattering tokens into expert
+buffers (scatters shard poorly under GSPMD), we compute, for every expert
+slot ``(e, c)``, the token index that fills it, and gather.  The combine is
+another gather.  HLO FLOPs stay proportional to ``top_k * capacity_factor``
+(active experts), not ``n_experts`` — critical for the arctic-480b
+(128-expert) roofline.
+
+Routing is per batch row (tokens never cross rows), so data-parallel
+sharding needs no routing communication; expert parallelism shards the
+``experts`` logical axis of the buffers and weights.
+
+Supports the two assigned MoE archs:
+  * dbrx-132b   — 16 experts, top-4
+  * arctic-480b — 128 experts, top-2, plus a *dense residual* MLP branch
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import initializers as init
+from repro.nn.mlp import ACTIVATIONS, MLPConfig, mlp_apply, mlp_init
+from repro.nn.types import P
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff: int
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    activation: str = "silu"
+    gated: bool = True
+    dense_residual: bool = False  # arctic-style parallel dense MLP
+    dense_d_ff: Optional[int] = None
+    router_jitter: float = 0.0
+    # shard_ff: 2D expert sharding (experts -> model axis, d_ff -> data
+    # axis).  Keeps the huge expert weights fully resident instead of
+    # FSDP-regathering them every layer: collectives become
+    # activation-sized reduce-scatters.  §Perf beyond-paper optimization.
+    shard_ff: bool = False
+
+    def capacity(self, seq: int) -> int:
+        cap = int(self.top_k * seq * self.capacity_factor / self.n_experts)
+        return max(1, min(seq, cap))
+
+
+def moe_init(cfg: MoEConfig, key, dtype=jnp.float32):
+    kr, kg, ku, kd, kres = jax.random.split(key, 5)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    if cfg.shard_ff:
+        up_axes, down_axes = ("experts", None, "expert_mlp"), ("experts", "expert_mlp", None)
+    else:
+        up_axes, down_axes = ("experts", "embed", "mlp"), ("experts", "mlp", "embed")
+    params = {
+        "w_router": P(init.scaled_normal(kr, (d, e), jnp.float32), ("embed", None)),
+        "w_up": P(init.scaled_normal(ku, (e, d, f), dtype, fan_in=d), up_axes),
+        "w_down": P(init.scaled_normal(kd, (e, f, d), dtype, fan_in=f), down_axes),
+    }
+    if cfg.gated:
+        params["w_gate"] = P(init.scaled_normal(kg, (e, d, f), dtype, fan_in=d), up_axes)
+    if cfg.dense_residual:
+        dcfg = MLPConfig(cfg.d_model, cfg.dense_d_ff or cfg.d_ff, cfg.activation, gated=cfg.gated)
+        params["dense"] = mlp_init(dcfg, kres, dtype)
+    return params
+
+
+def route_topk(router_logits, top_k):
+    """Top-k routing.  router_logits: (B,S,E) f32.
+
+    Returns (expert_ids (B,S,K) int32, gates (B,S,K) f32 renormalized,
+             full_probs (B,S,E) f32 for aux losses).
+    """
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    gates, expert_ids = jax.lax.top_k(probs, top_k)
+    gates = gates / jnp.clip(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    return expert_ids.astype(jnp.int32), gates, probs
+
+
+def _slot_assignment(expert_ids, n_experts, capacity):
+    """Compute the gather plan for one batch of routed tokens.
+
+    expert_ids: (B, S, K).  Flattened choice order is row-major in (s, k) so
+    earlier tokens win capacity (stable, matches GShard cumsum semantics).
+
+    Returns:
+      slot_token: (B, E, C) int32 — flat (s*K+k) choice index filling each
+                  expert slot, or -1.
+      token_slot: (B, S, K) int32 — capacity slot for each choice, or -1
+                  when dropped.
+    """
+    b, s, k = expert_ids.shape
+    flat = expert_ids.reshape(b, s * k)
+    n = s * k
+    # Stable sort by expert id; ties keep (s,k) order.
+    sort_idx = jnp.argsort(flat, axis=-1, stable=True)  # (B, N)
+    sorted_experts = jnp.take_along_axis(flat, sort_idx, axis=-1)
+    # Position within each expert's run.
+    arange = jnp.arange(n)[None, :]
+    seg_start = jnp.where(
+        sorted_experts[:, :, None] == jnp.arange(n_experts)[None, None, :],
+        arange[:, :, None],
+        n,
+    ).min(axis=1)  # (B, E): first sorted index of each expert (n if absent)
+    pos_in_expert = arange - jnp.take_along_axis(seg_start, sorted_experts, axis=-1)
+    # slot_token[b, e, c] = sorted choice at seg_start[e] + c, if within run.
+    c_idx = jnp.arange(capacity)[None, None, :]
+    gather_idx = jnp.clip(seg_start[:, :, None] + c_idx, 0, n - 1)
+    cand = jnp.take_along_axis(sort_idx, gather_idx.reshape(b, -1), axis=-1).reshape(
+        b, n_experts, capacity
+    )
+    cand_expert = jnp.take_along_axis(
+        sorted_experts, jnp.clip(gather_idx, 0, n - 1).reshape(b, -1), axis=-1
+    ).reshape(b, n_experts, capacity)
+    valid_slot = (cand_expert == jnp.arange(n_experts)[None, :, None]) & (
+        seg_start[:, :, None] + c_idx < n
+    )
+    slot_token = jnp.where(valid_slot, cand, -1)
+    # token_slot: invert. pos_in_expert per sorted entry; map back to choice.
+    kept = pos_in_expert < capacity
+    choice_slot_sorted = jnp.where(kept, pos_in_expert, -1)
+    token_slot = jnp.take_along_axis(
+        choice_slot_sorted, jnp.argsort(sort_idx, axis=-1), axis=-1
+    )
+    return slot_token, token_slot.reshape(b, s, k)
+
+
+def moe_apply(params, cfg: MoEConfig, x, return_aux: bool = False):
+    """x: (B, S, d_model) -> (B, S, d_model)."""
+    b, s, d = x.shape
+    cap = cfg.capacity(s)
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), params["w_router"])
+    expert_ids, gates, probs = route_topk(logits, cfg.top_k)
+    slot_token, token_slot = _slot_assignment(expert_ids, cfg.n_experts, cap)
+
+    # Dispatch: gather tokens into (B, E, C, d).
+    token_of_choice = jnp.clip(slot_token, 0) // cfg.top_k  # flat choice -> s
+    gather_s = token_of_choice.reshape(b, cfg.n_experts * cap)
+    buf = jnp.take_along_axis(x, gather_s[:, :, None], axis=1)
+    buf = buf.reshape(b, cfg.n_experts, cap, d)
+    buf = buf * (slot_token >= 0)[..., None].astype(buf.dtype)
+
+    # Expert computation: (B,E,C,d) x (E,d,f).
+    act = ACTIVATIONS[cfg.activation]
+    up = jnp.einsum("becd,edf->becf", buf, params["w_up"])
+    if cfg.gated:
+        gate = act(jnp.einsum("becd,edf->becf", buf, params["w_gate"]))
+        h = gate * up
+    else:
+        h = act(up)
+    out_buf = jnp.einsum("becf,efd->becd", h, params["w_down"])  # (B,E,C,d)
+
+    # Combine: for each (token, choice) gather its slot output.
+    flat_out = out_buf.reshape(b, cfg.n_experts * cap, d)
+    choice_expert = expert_ids.reshape(b, s * cfg.top_k)
+    choice_slot = token_slot.reshape(b, s * cfg.top_k)
+    flat_idx = jnp.clip(choice_expert * cap + choice_slot, 0)
+    y = jnp.take_along_axis(flat_out, flat_idx[:, :, None], axis=1)
+    y = y * (choice_slot >= 0)[..., None].astype(y.dtype)
+    y = y.reshape(b, s, cfg.top_k, d)
+    y = jnp.sum(y * gates[..., None].astype(y.dtype), axis=2)
+
+    if cfg.dense_residual:
+        dcfg = MLPConfig(cfg.d_model, cfg.dense_d_ff or cfg.d_ff, cfg.activation, gated=cfg.gated)
+        y = y + mlp_apply(params["dense"], dcfg, x)
+
+    if return_aux:
+        # Load-balancing auxiliaries (Switch-style).
+        me = jnp.mean(probs, axis=(0, 1))  # mean router prob per expert
+        ce = jnp.mean(
+            (jax.nn.one_hot(expert_ids, cfg.n_experts).sum(2) > 0).astype(jnp.float32),
+            axis=(0, 1),
+        )
+        aux = {
+            "load_balance_loss": cfg.n_experts * jnp.sum(me * ce),
+            "dropped_fraction": jnp.mean((token_slot < 0).astype(jnp.float32)),
+        }
+        return y.astype(x.dtype), aux
+    return y.astype(x.dtype)

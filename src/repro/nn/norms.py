@@ -1,0 +1,38 @@
+"""Normalization layers (RMSNorm / LayerNorm), functional style."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.nn.types import P
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": P(jnp.ones((d,), dtype), ("embed",))}
+
+
+def rmsnorm_apply(params, x, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * (var + eps) ** -0.5
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {
+        "scale": P(jnp.ones((d,), dtype), ("embed",)),
+        "bias": P(jnp.zeros((d,), dtype), ("embed",)),
+    }
+
+
+def layernorm_apply(params, x, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * (var + eps) ** -0.5
+    return (y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)).astype(dtype)
+
+
+NORM_INIT = {"rmsnorm": rmsnorm_init, "layernorm": layernorm_init}
+NORM_APPLY = {"rmsnorm": rmsnorm_apply, "layernorm": layernorm_apply}

@@ -1,0 +1,30 @@
+"""Rotary position embeddings (RoPE), supporting arbitrary position ids."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_frequencies(d_head: int, theta: float = 10000.0):
+    """Inverse frequencies for half the head dim."""
+    half = d_head // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """Apply RoPE.
+
+    x:         (..., seq, heads, d_head)  [or (..., seq, d_head)]
+    positions: (..., seq) integer position ids broadcastable to x's seq dim.
+    """
+    d_head = x.shape[-1]
+    inv_freq = rope_frequencies(d_head, theta)  # (half,)
+    # angles: (..., seq, half)
+    angles = positions.astype(jnp.float32)[..., None] * inv_freq
+    cos = jnp.cos(angles)
+    sin = jnp.sin(angles)
+    if x.ndim == positions.ndim + 2:  # heads axis present between seq and d_head
+        cos = cos[..., None, :]
+        sin = sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,72 @@
+"""Parameter annotation substrate.
+
+Every parameter created by a layer's ``init`` is wrapped in :class:`P`,
+which carries the array together with per-dimension *logical axis* names
+("embed", "mlp", "heads", "vocab", "experts", ...).  The distributed layer
+(`repro.distributed.sharding`) later maps logical axes onto mesh axes,
+falling back to replication when a dimension is not divisible.
+
+``split(tree)`` separates a P-tree into (value pytree, axes pytree) so the
+value tree is a plain jit-able pytree of arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class P:
+    """An annotated parameter: array + logical axis name per dimension.
+
+    Registered as a pytree node (axes are static aux data) so annotated
+    trees pass through jit/vmap — ``jax.vmap`` over a layer ``init``
+    produces stacked values whose axes tuples then describe the *trailing*
+    dims (the sharding resolver pads leading dims with None).
+    """
+
+    value: jnp.ndarray
+    axes: Tuple[Optional[str], ...]
+
+
+jax.tree_util.register_pytree_node(
+    P,
+    lambda p: ((p.value,), p.axes),
+    lambda axes, children: P(children[0], axes),
+)
+
+
+def is_annotated(x: Any) -> bool:
+    return isinstance(x, P)
+
+
+def split(tree):
+    """P-tree -> (values, axes).  Non-P leaves pass through with axes=None."""
+    values = jax.tree_util.tree_map(
+        lambda x: x.value if isinstance(x, P) else x, tree, is_leaf=is_annotated
+    )
+    axes = jax.tree_util.tree_map(
+        lambda x: x.axes if isinstance(x, P) else None, tree, is_leaf=is_annotated
+    )
+    return values, axes
+
+
+def merge(values, axes):
+    """Inverse of :func:`split`."""
+    return jax.tree_util.tree_map(
+        lambda v, a: P(v, a) if a is not None else v, values, axes,
+        is_leaf=lambda x: x is None,
+    )
+
+
+def param_count(values) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(values))
+
+
+def param_bytes(values) -> int:
+    return sum(
+        int(x.size) * x.dtype.itemsize for x in jax.tree_util.tree_leaves(values)
+    )

@@ -1,0 +1,403 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, true recurrence).
+
+mLSTM uses the same TPU-native chunking strategy as Mamba2: intra-chunk
+work becomes MXU matmuls over (chunk x chunk) tiles, the inter-chunk state
+``(C, n, m)`` is carried by a short scan.  Exponential gating is stabilized
+with the running max ``m`` exactly as in the xLSTM paper.  A step-by-step
+recurrent oracle (``mlstm_recurrent``) is used by tests and by decode.
+
+sLSTM has hidden-state-dependent gates, so it is inherently sequential;
+we implement it as a `lax.scan` over time with block-diagonal (per-head)
+recurrent matrices.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import initializers as init
+from repro.nn.types import P as Param
+
+
+@dataclasses.dataclass(frozen=True)
+class MLSTMConfig:
+    d_model: int
+    n_heads: int = 4
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 128
+    impl: str = "xla"  # "xla" | "pallas"
+    # dry-run cost accounting: unroll the chunk scan so HloCostAnalysis
+    # sees every chunk's matmuls (see launch/dryrun.py)
+    scan_unroll: bool = False
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def d_head(self) -> int:
+        return self.d_inner // self.n_heads
+
+
+@dataclasses.dataclass(frozen=True)
+class SLSTMConfig:
+    d_model: int
+    n_heads: int = 4
+    conv_width: int = 4
+    proj_factor: float = 4.0 / 3.0
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def d_up(self) -> int:
+        # round up to a multiple of 64 for MXU alignment
+        return int(-(-self.d_model * self.proj_factor // 64) * 64)
+
+
+# --------------------------------------------------------------------------
+# mLSTM
+# --------------------------------------------------------------------------
+
+def mlstm_init(cfg: MLSTMConfig, key, dtype=jnp.float32):
+    d_in = cfg.d_inner
+    ks = jax.random.split(key, 8)
+    return {
+        "up_proj": Param(init.scaled_normal(ks[0], (cfg.d_model, 2 * d_in), dtype), ("embed", "mlp")),
+        "conv_w": Param(init.scaled_normal(ks[1], (cfg.conv_width, d_in), dtype, fan_in=cfg.conv_width), (None, "mlp")),
+        "conv_b": Param(jnp.zeros((d_in,), dtype), ("mlp",)),
+        # per-head block-diagonal projections (official xLSTM BlockLinear)
+        "wq": Param(init.scaled_normal(ks[2], (cfg.n_heads, cfg.d_head, cfg.d_head), dtype, fan_in=cfg.d_head), ("heads", "mlp", None)),
+        "wk": Param(init.scaled_normal(ks[3], (cfg.n_heads, cfg.d_head, cfg.d_head), dtype, fan_in=cfg.d_head), ("heads", "mlp", None)),
+        "wv": Param(init.scaled_normal(ks[4], (cfg.n_heads, cfg.d_head, cfg.d_head), dtype, fan_in=cfg.d_head), ("heads", "mlp", None)),
+        "w_if": Param(init.scaled_normal(ks[5], (d_in, 2 * cfg.n_heads), jnp.float32), ("mlp", None)),
+        "b_if": Param(jnp.concatenate([jnp.zeros((cfg.n_heads,)), 3.0 * jnp.ones((cfg.n_heads,))]), (None,)),
+        "norm_scale": Param(jnp.ones((d_in,), dtype), ("mlp",)),
+        "down_proj": Param(init.scaled_normal(ks[6], (d_in, cfg.d_model), dtype, fan_in=d_in), ("mlp", "embed")),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    from repro.nn.ssm import causal_conv1d
+
+    return causal_conv1d(x, w, b, state)
+
+
+def mlstm_chunked(q, k, v, i_log, f_log, chunk, initial=None, unroll=False):
+    """Chunkwise-parallel mLSTM cell.
+
+    q, k, v: (B, L, H, P);  i_log, f_log: (B, L, H) log-space gates.
+    Returns (h (B,L,H,P), final (C, n, m)).
+    """
+    b, l, h, p = q.shape
+    assert l % chunk == 0
+    nc, qq = l // chunk, chunk
+    scale = p ** -0.5
+
+    qc = q.reshape(b, nc, qq, h, p)
+    kc = k.reshape(b, nc, qq, h, p) * scale
+    vc = v.reshape(b, nc, qq, h, p)
+    ic = i_log.reshape(b, nc, qq, h).astype(jnp.float32)
+    fc = f_log.reshape(b, nc, qq, h).astype(jnp.float32)
+    fcum = jnp.cumsum(fc, axis=2)  # inclusive within chunk
+    ftot = fcum[:, :, -1]  # (b,nc,h)
+
+    if initial is None:
+        c0 = jnp.zeros((b, h, p, p), jnp.float32)
+        n0 = jnp.zeros((b, h, p), jnp.float32)
+        m0 = jnp.full((b, h), -jnp.inf, jnp.float32)
+    else:
+        c0, n0, m0 = initial
+
+    tri = jnp.tril(jnp.ones((qq, qq), bool))[None, None]  # (1,1,q,q)
+
+    def chunk_step(carry, inp):
+        c_s, n_s, m_s = carry
+        qk_, kk_, vk_, ik_, fk_, fcum_k, ftot_k = inp
+        # log weights: intra  a[i,j] = fcum_i - fcum_j + i_j   (j <= i)
+        #              inter  b[i]   = fcum_i + m_s
+        fci = fcum_k.transpose(0, 2, 1)  # (b,h,q)
+        a_log = fci[:, :, :, None] - fci[:, :, None, :] + ik_.transpose(0, 2, 1)[:, :, None, :]
+        a_log = jnp.where(tri, a_log, -jnp.inf)  # (b,h,qi,qj)
+        b_log = fci + m_s[:, :, None]  # (b,h,q)
+        m_i = jnp.maximum(jnp.max(a_log, axis=-1), b_log)  # (b,h,q)
+        m_i = jnp.maximum(m_i, -(10.0 ** 6))  # avoid -inf - -inf
+        intra_w = jnp.exp(a_log - m_i[..., None])  # (b,h,qi,qj)
+        inter_w = jnp.exp(b_log - m_i)  # (b,h,q)
+
+        qkT = jnp.einsum("bqhp,bjhp->bhqj", qk_, kk_).astype(jnp.float32)
+        s_intra = qkT * intra_w
+        h_num = jnp.einsum("bhqj,bjhp->bqhp", s_intra.astype(vk_.dtype), vk_).astype(jnp.float32)
+        h_num += jnp.einsum("bqhp,bhpd,bhq->bqhd", qk_.astype(jnp.float32), c_s, inter_w)
+        denom = s_intra.sum(axis=-1)  # (b,h,q)
+        denom += jnp.einsum("bqhp,bhp->bhq", qk_.astype(jnp.float32), n_s) * inter_w
+        denom = jnp.maximum(jnp.abs(denom), jnp.exp(-m_i))  # (b,h,q)
+        h_out = h_num / denom.transpose(0, 2, 1)[..., None]
+
+        # state update to chunk end
+        w_log = ftot_k[:, :, None] - fci + ik_.transpose(0, 2, 1)  # (b,h,q)
+        m_next = jnp.maximum(ftot_k + m_s, jnp.max(w_log, axis=-1))
+        m_next = jnp.maximum(m_next, -(10.0 ** 6))
+        kw = jnp.exp(w_log - m_next[..., None])  # (b,h,q)
+        c_upd = jnp.einsum("bjhp,bhj,bjhd->bhpd", kk_.astype(jnp.float32), kw, vk_.astype(jnp.float32))
+        n_upd = jnp.einsum("bjhp,bhj->bhp", kk_.astype(jnp.float32), kw)
+        carry_decay = jnp.exp(ftot_k + m_s - m_next)[:, :, None]
+        c_next = carry_decay[..., None] * c_s + c_upd
+        n_next = carry_decay * n_s + n_upd
+        return (c_next, n_next, m_next), h_out
+
+    xs = (
+        qc.transpose(1, 0, 2, 3, 4),
+        kc.transpose(1, 0, 2, 3, 4),
+        vc.transpose(1, 0, 2, 3, 4),
+        ic.transpose(1, 0, 2, 3),
+        fc.transpose(1, 0, 2, 3),
+        fcum.transpose(1, 0, 2, 3),
+        ftot.transpose(1, 0, 2),
+    )
+    (c_f, n_f, m_f), hs = jax.lax.scan(chunk_step, (c0, n0, m0), xs,
+                                       unroll=nc if unroll else 1)
+    h_seq = hs.transpose(1, 0, 2, 3, 4).reshape(b, l, h, p)
+    return h_seq.astype(q.dtype), (c_f, n_f, m_f)
+
+
+def mlstm_step(state, q_t, k_t, v_t, i_t, f_t):
+    """Single recurrent mLSTM step.  q/k/v: (B,H,P); i/f: (B,H) raw logs.
+    state = (C (B,H,P,P), n (B,H,P), m (B,H))."""
+    c_s, n_s, m_s = state
+    p = q_t.shape[-1]
+    k_t = k_t * (p ** -0.5)
+    m_next = jnp.maximum(f_t + m_s, i_t)
+    m_next = jnp.maximum(m_next, -(10.0 ** 6))
+    f_w = jnp.exp(f_t + m_s - m_next)[..., None]
+    i_w = jnp.exp(i_t - m_next)[..., None]
+    kf = k_t.astype(jnp.float32)
+    vf = v_t.astype(jnp.float32)
+    c_next = f_w[..., None] * c_s + i_w[..., None] * kf[..., :, None] * vf[..., None, :]
+    n_next = f_w * n_s + i_w * kf
+    qf = q_t.astype(jnp.float32)
+    num = jnp.einsum("bhp,bhpd->bhd", qf, c_next)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", qf, n_next)), jnp.exp(-m_next))
+    h = num / den[..., None]
+    return (c_next, n_next, m_next), h.astype(q_t.dtype)
+
+
+def mlstm_recurrent(q, k, v, i_log, f_log, initial=None):
+    """Step-by-step oracle.  Same shapes/returns as :func:`mlstm_chunked`."""
+    b, l, h, p = q.shape
+    if initial is None:
+        initial = (
+            jnp.zeros((b, h, p, p), jnp.float32),
+            jnp.zeros((b, h, p), jnp.float32),
+            jnp.full((b, h), -jnp.inf, jnp.float32),
+        )
+
+    def step(carry, inp):
+        qt, kt, vt, it, ft = inp
+        carry, h_t = mlstm_step(carry, qt, kt, vt, it, ft)
+        return carry, h_t
+
+    xs = (
+        q.transpose(1, 0, 2, 3),
+        k.transpose(1, 0, 2, 3),
+        v.transpose(1, 0, 2, 3),
+        i_log.transpose(1, 0, 2).astype(jnp.float32),
+        f_log.transpose(1, 0, 2).astype(jnp.float32),
+    )
+    final, hs = jax.lax.scan(step, initial, xs)
+    return hs.transpose(1, 0, 2, 3), final
+
+
+def _group_norm_heads(x, scale, eps=1e-6):
+    """Per-head group norm over the head dim. x: (B,L,H,P), scale: (H*P,)."""
+    b, l, h, p = x.shape
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * (var + eps) ** -0.5
+    return (y.reshape(b, l, h * p) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _mlstm_qkv_gates(params, cfg: MLSTMConfig, x, conv_state=None):
+    b, l, _ = x.shape
+    d_in = cfg.d_inner
+    up = jnp.einsum("bld,dk->blk", x, params["up_proj"])
+    xm, z = up[..., :d_in], up[..., d_in:]
+    if conv_state is None:
+        xc = jax.nn.silu(_causal_conv(xm, params["conv_w"], params["conv_b"]))
+        new_conv = None
+    else:
+        xc, new_conv = _causal_conv(xm, params["conv_w"], params["conv_b"], state=conv_state)
+        xc = jax.nn.silu(xc)
+    xch = xc.reshape(b, l, cfg.n_heads, cfg.d_head)
+    xmh = xm.reshape(b, l, cfg.n_heads, cfg.d_head)
+    q = jnp.einsum("blhp,hpk->blhk", xch, params["wq"])
+    k = jnp.einsum("blhp,hpk->blhk", xch, params["wk"])
+    v = jnp.einsum("blhp,hpk->blhk", xmh, params["wv"])
+    if_pre = jnp.einsum("bld,dk->blk", xm.astype(jnp.float32), params["w_if"]) + params["b_if"]
+    i_log = if_pre[..., : cfg.n_heads]
+    f_log = jax.nn.log_sigmoid(if_pre[..., cfg.n_heads :])
+    return q, k, v, i_log, f_log, z, new_conv
+
+
+def _fit_chunk(l: int, chunk: int) -> int:
+    ck = min(chunk, l)
+    while l % ck:
+        ck -= 1
+    return ck
+
+
+def mlstm_block_apply(params, cfg: MLSTMConfig, x):
+    """Full mLSTM block: up-proj, conv, cell, gated output, down-proj."""
+    q, k, v, i_log, f_log, z, _ = _mlstm_qkv_gates(params, cfg, x)
+    chunk = _fit_chunk(x.shape[1], cfg.chunk)
+    if cfg.impl == "pallas":
+        from repro.kernels import ops as kops
+
+        h, _ = kops.mlstm_scan(q, k, v, i_log, f_log, chunk=chunk)
+    else:
+        h, _ = mlstm_chunked(q, k, v, i_log, f_log, chunk, unroll=cfg.scan_unroll)
+    h = _group_norm_heads(h, params["norm_scale"])
+    h = h * jax.nn.silu(z)
+    return jnp.einsum("bld,dk->blk", h, params["down_proj"])
+
+
+def init_mlstm_cache(cfg: MLSTMConfig, batch, dtype=jnp.float32):
+    p = cfg.d_head
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_inner), dtype),
+        "c": jnp.zeros((batch, cfg.n_heads, p, p), jnp.float32),
+        "n": jnp.zeros((batch, cfg.n_heads, p), jnp.float32),
+        "m": jnp.full((batch, cfg.n_heads), -1e6, jnp.float32),
+    }
+
+
+def mlstm_block_decode(params, cfg: MLSTMConfig, x, cache):
+    """One-token decode.  x: (B,1,d_model)."""
+    q, k, v, i_log, f_log, z, new_conv = _mlstm_qkv_gates(
+        params, cfg, x, conv_state=cache["conv"].astype(x.dtype)
+    )
+    state = (cache["c"], cache["n"], cache["m"])
+    state, h_t = mlstm_step(
+        state, q[:, 0], k[:, 0], v[:, 0], i_log[:, 0], f_log[:, 0]
+    )
+    h = h_t[:, None]
+    h = _group_norm_heads(h, params["norm_scale"])
+    h = h * jax.nn.silu(z)
+    out = jnp.einsum("bld,dk->blk", h, params["down_proj"])
+    new_cache = {
+        "conv": new_conv.astype(cache["conv"].dtype),
+        "c": state[0],
+        "n": state[1],
+        "m": state[2],
+    }
+    return out, new_cache
+
+
+# --------------------------------------------------------------------------
+# sLSTM
+# --------------------------------------------------------------------------
+
+def slstm_init(cfg: SLSTMConfig, key, dtype=jnp.float32):
+    d, hh, p = cfg.d_model, cfg.n_heads, cfg.d_head
+    ks = jax.random.split(key, 6)
+    return {
+        "conv_w": Param(init.scaled_normal(ks[0], (cfg.conv_width, d), dtype, fan_in=cfg.conv_width), (None, "embed")),
+        "conv_b": Param(jnp.zeros((d,), dtype), ("embed",)),
+        "w_gates": Param(init.scaled_normal(ks[1], (d, 4 * d), dtype), ("embed", "mlp")),
+        "r_gates": Param(init.scaled_normal(ks[2], (hh, p, 4 * p), dtype, fan_in=p), (None, None, None)),
+        "b_gates": Param(jnp.zeros((4 * d,), jnp.float32), ("mlp",)),
+        "norm_scale": Param(jnp.ones((d,), dtype), ("embed",)),
+        "up_proj": Param(init.scaled_normal(ks[3], (d, 2 * cfg.d_up), dtype), ("embed", "mlp")),
+        "down_proj": Param(init.scaled_normal(ks[4], (cfg.d_up, d), dtype, fan_in=cfg.d_up), ("mlp", "embed")),
+    }
+
+
+def slstm_cell_step(state, x_gates, r_w, n_heads, d_head):
+    """One sLSTM step.  state = (c, n, m, h) each (B, H, P) except m (B,H).
+    x_gates: (B, 4*d) input-side gate preactivations."""
+    c_s, n_s, m_s, h_s = state
+    b = x_gates.shape[0]
+    # recurrent contribution: block-diagonal per head
+    h_heads = h_s.reshape(b, n_heads, d_head)
+    r_contrib = jnp.einsum("bhp,hpk->bhk", h_heads.astype(jnp.float32), r_w.astype(jnp.float32))
+    # gate layout is per-head-major: (head, gate-kind, unit)
+    gates = x_gates.astype(jnp.float32).reshape(b, n_heads, 4, d_head) + r_contrib.reshape(
+        b, n_heads, 4, d_head
+    )
+    i_raw, f_raw = gates[:, :, 0], gates[:, :, 1]
+    z_raw, o_raw = gates[:, :, 2], gates[:, :, 3]
+    f_log = jax.nn.log_sigmoid(f_raw)
+    m_next = jnp.maximum(f_log + m_s, i_raw)
+    m_next = jnp.maximum(m_next, -(10.0 ** 6))
+    i_w = jnp.exp(i_raw - m_next)
+    f_w = jnp.exp(f_log + m_s - m_next)
+    c_next = f_w * c_s + i_w * jnp.tanh(z_raw)
+    n_next = f_w * n_s + i_w
+    h_next = jax.nn.sigmoid(o_raw) * c_next / jnp.maximum(n_next, 1.0)
+    return (c_next, n_next, m_next, h_next.astype(h_s.dtype))
+
+
+def slstm_block_apply(params, cfg: SLSTMConfig, x, cache=None):
+    """sLSTM block forward (scan over time).  x: (B, L, d_model).
+
+    When ``cache`` is provided (decode), x is (B, 1, d) and the updated
+    cache is returned alongside the output.
+    """
+    b, l, d = x.shape
+    decode = cache is not None
+    if decode:
+        xc, new_conv = _causal_conv(x, params["conv_w"], params["conv_b"], state=cache["conv"].astype(x.dtype))
+        xc = jax.nn.silu(xc)
+        state = (cache["c"], cache["n"], cache["m"], cache["h"])
+    else:
+        xc = jax.nn.silu(_causal_conv(x, params["conv_w"], params["conv_b"]))
+        state = (
+            jnp.zeros((b, cfg.n_heads, cfg.d_head), jnp.float32),
+            jnp.zeros((b, cfg.n_heads, cfg.d_head), jnp.float32),
+            jnp.full((b, cfg.n_heads, cfg.d_head), -1e6, jnp.float32),
+            jnp.zeros((b, cfg.n_heads, cfg.d_head), x.dtype),
+        )
+    x_gates_all = jnp.einsum("bld,dk->blk", xc, params["w_gates"]) + params["b_gates"]
+
+    if decode:
+        state = slstm_cell_step(state, x_gates_all[:, 0], params["r_gates"], cfg.n_heads, cfg.d_head)
+        h_seq = state[3].reshape(b, 1, d)
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype), "c": state[0], "n": state[1], "m": state[2], "h": state[3]}
+    else:
+        def step(carry, xg):
+            carry = slstm_cell_step(carry, xg, params["r_gates"], cfg.n_heads, cfg.d_head)
+            return carry, carry[3]
+
+        _, hs = jax.lax.scan(step, state, x_gates_all.transpose(1, 0, 2))
+        h_seq = hs.transpose(1, 0, 2, 3).reshape(b, l, d)
+        new_cache = None
+
+    # output: group norm + gated up/down projection
+    xf = h_seq.astype(jnp.float32).reshape(b, -1, cfg.n_heads, cfg.d_head)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = ((xf - mu) * (var + 1e-6) ** -0.5).reshape(b, -1, d).astype(x.dtype) * params["norm_scale"]
+    up = jnp.einsum("bld,dk->blk", y, params["up_proj"])
+    u1, u2 = jnp.split(up, 2, axis=-1)
+    y = jax.nn.gelu(u1) * u2
+    out = jnp.einsum("bld,dk->blk", y, params["down_proj"])
+    if decode:
+        return out, new_cache
+    return out
+
+
+def init_slstm_cache(cfg: SLSTMConfig, batch, dtype=jnp.float32):
+    hp = (batch, cfg.n_heads, cfg.d_head)
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_model), dtype),
+        "c": jnp.zeros(hp, jnp.float32),
+        "n": jnp.zeros(hp, jnp.float32),
+        "m": jnp.full(hp, -1e6, jnp.float32),
+        "h": jnp.zeros(hp, dtype),
+    }

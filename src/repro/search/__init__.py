@@ -1,0 +1,28 @@
+from repro.search.pruners import MedianPruner, SuccessiveHalvingPruner
+from repro.search.samplers import (
+    GridSampler,
+    NSGA2Sampler,
+    RandomSampler,
+    RegularizedEvolutionSampler,
+    TPESampler,
+    pareto_front,
+)
+from repro.search.study import HardConstraintViolated, Study, TrialPruned
+from repro.search.trial import Distribution, Trial, TrialState
+
+__all__ = [
+    "Distribution",
+    "GridSampler",
+    "HardConstraintViolated",
+    "MedianPruner",
+    "NSGA2Sampler",
+    "RandomSampler",
+    "RegularizedEvolutionSampler",
+    "Study",
+    "SuccessiveHalvingPruner",
+    "TPESampler",
+    "Trial",
+    "TrialPruned",
+    "TrialState",
+    "pareto_front",
+]

@@ -1,0 +1,217 @@
+"""Samplers: Random, Grid, TPE-lite, Regularized Evolution, NSGA-II.
+
+These provide the Optuna sampler surface the paper builds on.  All
+samplers implement *independent* per-distribution sampling through
+``sample(study, trial, name, dist)`` — population-based samplers
+additionally precompute a full parent configuration per trial and serve
+values from it, falling back to random for never-seen parameters (which
+naturally handles conditional search spaces created by the DSL's dynamic
+block expansion).
+"""
+from __future__ import annotations
+
+import math
+import random
+from collections import defaultdict
+from typing import Any, Dict, List, Optional
+
+from repro.search.trial import Distribution, Trial, TrialState
+
+
+class BaseSampler:
+    def __init__(self, seed: Optional[int] = None):
+        self.rng = random.Random(seed)
+
+    def sample(self, study, trial: Trial, name: str, dist: Distribution) -> Any:
+        raise NotImplementedError
+
+    def on_trial_start(self, study, trial: Trial) -> None:  # hook
+        pass
+
+
+class RandomSampler(BaseSampler):
+    def sample(self, study, trial, name, dist):
+        return dist.random(self.rng)
+
+
+class GridSampler(BaseSampler):
+    """Exhaustive sweep over categorical/int grids (continuous -> random)."""
+
+    def __init__(self, seed: Optional[int] = None):
+        super().__init__(seed)
+        self._cursor: Dict[str, int] = defaultdict(int)
+
+    def sample(self, study, trial, name, dist):
+        if dist.kind == "float":
+            return dist.random(self.rng)
+        grid = dist.grid()
+        # position determined by trial number so the cartesian product is
+        # swept in mixed-radix order across trials
+        seen_dists = study.distribution_registry
+        if name not in seen_dists:
+            seen_dists[name] = dist
+        names = sorted(seen_dists)
+        radix = 1
+        for n in names:
+            if n == name:
+                break
+            d = seen_dists[n]
+            if d.kind != "float":
+                radix *= max(1, len(d.grid()))
+        return grid[(trial.number // radix) % len(grid)]
+
+
+class TPESampler(BaseSampler):
+    """Tree-structured Parzen Estimator (lite).
+
+    Splits completed trials into good/bad by the gamma-quantile of the
+    first objective and samples the candidate maximizing l(x)/g(x)
+    (kernel density for continuous, smoothed counts for categorical).
+    """
+
+    def __init__(self, seed: Optional[int] = None, gamma: float = 0.25,
+                 n_candidates: int = 24, n_startup: int = 10):
+        super().__init__(seed)
+        self.gamma = gamma
+        self.n_candidates = n_candidates
+        self.n_startup = n_startup
+
+    def _split(self, study, name):
+        done = [
+            t for t in study.trials
+            if t.state == TrialState.COMPLETE and name in t.params and t.values
+        ]
+        if len(done) < self.n_startup:
+            return None, None
+        sign = 1.0 if study.directions[0] == "minimize" else -1.0
+        done.sort(key=lambda t: sign * t.values[0])
+        n_good = max(1, int(self.gamma * len(done)))
+        return done[:n_good], done[n_good:]
+
+    def sample(self, study, trial, name, dist):
+        good, bad = self._split(study, name)
+        if good is None:
+            return dist.random(self.rng)
+        gvals = [t.params[name] for t in good]
+        bvals = [t.params[name] for t in bad] or gvals
+        if dist.kind == "categorical":
+            def score(c):
+                lg = (gvals.count(c) + 0.5) / (len(gvals) + 0.5 * len(dist.choices))
+                lb = (bvals.count(c) + 0.5) / (len(bvals) + 0.5 * len(dist.choices))
+                return lg / lb
+            return max(dist.choices, key=score)
+        # continuous / int: KDE with Scott bandwidth over candidates
+        lo, hi = float(dist.low), float(dist.high)
+        width = max(hi - lo, 1e-12)
+
+        def kde(vals, x):
+            bw = max(1.06 * width * len(vals) ** -0.2, width / 50)
+            return sum(math.exp(-0.5 * ((x - v) / bw) ** 2) for v in vals) / (len(vals) * bw)
+
+        cands = [dist.random(self.rng) for _ in range(self.n_candidates)]
+        best = max(cands, key=lambda x: (kde(gvals, x) + 1e-12) / (kde(bvals, x) + 1e-12))
+        if dist.kind == "int":
+            step = int(dist.step or 1)
+            best = int(round((best - dist.low) / step)) * step + int(dist.low)
+            best = min(max(best, int(dist.low)), int(dist.high))
+        return best
+
+
+class RegularizedEvolutionSampler(BaseSampler):
+    """Regularized evolution (Real et al., 2019): tournament-select a parent
+    from a sliding population, mutate one parameter."""
+
+    def __init__(self, seed: Optional[int] = None, population: int = 20,
+                 tournament: int = 5, mutation_rate: float = 1.0):
+        super().__init__(seed)
+        self.population = population
+        self.tournament = tournament
+        self.mutation_rate = mutation_rate
+        self._parent_params: Dict[int, Dict[str, Any]] = {}
+        self._mutated: Dict[int, set] = {}
+
+    def on_trial_start(self, study, trial):
+        done = [t for t in study.trials if t.state == TrialState.COMPLETE and t.values]
+        pop = done[-self.population :]
+        if not pop:
+            return
+        sign = 1.0 if study.directions[0] == "minimize" else -1.0
+        cohort = [pop[self.rng.randrange(len(pop))] for _ in range(min(self.tournament, len(pop)))]
+        parent = min(cohort, key=lambda t: sign * t.values[0])
+        self._parent_params[trial.number] = dict(parent.params)
+        names = list(parent.params)
+        n_mut = max(1, int(round(self.mutation_rate)))
+        self._mutated[trial.number] = set(self.rng.sample(names, min(n_mut, len(names))))
+
+    def sample(self, study, trial, name, dist):
+        parent = self._parent_params.get(trial.number)
+        if parent is None or name not in parent or name in self._mutated.get(trial.number, ()):
+            return dist.random(self.rng)
+        return parent[name]
+
+
+def _dominates(a, b, directions) -> bool:
+    signs = [1.0 if d == "minimize" else -1.0 for d in directions]
+    av = [s * v for s, v in zip(signs, a)]
+    bv = [s * v for s, v in zip(signs, b)]
+    return all(x <= y for x, y in zip(av, bv)) and any(x < y for x, y in zip(av, bv))
+
+
+def pareto_front(trials, directions) -> List[Trial]:
+    done = [t for t in trials if t.state == TrialState.COMPLETE and t.values]
+    front = []
+    for t in done:
+        if not any(_dominates(o.values, t.values, directions) for o in done if o is not t):
+            front.append(t)
+    return front
+
+
+class NSGA2Sampler(BaseSampler):
+    """Multi-objective evolutionary sampler: nondominated-rank + crowding
+    tournament selection, uniform crossover, per-param mutation."""
+
+    def __init__(self, seed: Optional[int] = None, population: int = 24, mutation_p: float = 0.1):
+        super().__init__(seed)
+        self.population = population
+        self.mutation_p = mutation_p
+        self._parent_params: Dict[int, Dict[str, Any]] = {}
+
+    def _rank(self, trials, directions):
+        ranks = {}
+        remaining = list(trials)
+        r = 0
+        while remaining:
+            front = [
+                t for t in remaining
+                if not any(_dominates(o.values, t.values, directions) for o in remaining if o is not t)
+            ]
+            if not front:
+                front = list(remaining)
+            for t in front:
+                ranks[t.number] = r
+            remaining = [t for t in remaining if t not in front]
+            r += 1
+        return ranks
+
+    def on_trial_start(self, study, trial):
+        done = [t for t in study.trials if t.state == TrialState.COMPLETE and t.values]
+        pop = done[-self.population :]
+        if len(pop) < 2:
+            return
+        ranks = self._rank(pop, study.directions)
+        pick = lambda: min(
+            (pop[self.rng.randrange(len(pop))] for _ in range(2)),
+            key=lambda t: ranks[t.number],
+        )
+        p1, p2 = pick(), pick()
+        child = {
+            k: (p1.params.get(k) if self.rng.random() < 0.5 else p2.params.get(k, p1.params.get(k)))
+            for k in set(p1.params) | set(p2.params)
+        }
+        self._parent_params[trial.number] = child
+
+    def sample(self, study, trial, name, dist):
+        parent = self._parent_params.get(trial.number)
+        if parent is None or name not in parent or parent[name] is None or self.rng.random() < self.mutation_p:
+            return dist.random(self.rng)
+        return parent[name]

@@ -1,0 +1,131 @@
+"""Study: the optimization loop driver (+ resumable JSONL storage).
+
+Mirrors Optuna's surface used by the paper: ``optimize(objective,
+n_trials)``, multi-objective ``directions``, ``best_trial`` /
+``best_trials`` (Pareto), ask/tell, pruning via exceptions, and a
+crash-tolerant append-only storage so pod-scale NAS runs resume after
+preemption (the framework's fault-tolerance story applies to the search
+layer too, not just training).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.search.samplers import BaseSampler, RandomSampler, pareto_front
+from repro.search.trial import Distribution, Trial, TrialState
+
+
+class TrialPruned(Exception):
+    pass
+
+
+class HardConstraintViolated(Exception):
+    def __init__(self, name: str, value: float, limit: float):
+        super().__init__(f"hard constraint '{name}' violated: {value} > {limit}")
+        self.name, self.value, self.limit = name, value, limit
+
+
+class Study:
+    def __init__(
+        self,
+        name: str = "study",
+        sampler: Optional[BaseSampler] = None,
+        pruner=None,
+        directions: Sequence[str] = ("minimize",),
+        storage: Optional[str] = None,
+    ):
+        for d in directions:
+            assert d in ("minimize", "maximize"), d
+        self.name = name
+        self.sampler = sampler or RandomSampler()
+        self.pruner = pruner
+        self.directions = tuple(directions)
+        self.storage = storage
+        self.trials: List[Trial] = []
+        self.distribution_registry: Dict[str, Distribution] = {}
+        if storage and os.path.exists(storage):
+            self._load(storage)
+
+    # -- persistence ----------------------------------------------------------
+
+    def _load(self, path: str) -> None:
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                rec = json.loads(line)
+                if rec.get("kind") == "trial":
+                    t = Trial.from_dict(rec["trial"], self)
+                    existing = {x.number: i for i, x in enumerate(self.trials)}
+                    if t.number in existing:
+                        self.trials[existing[t.number]] = t
+                    else:
+                        self.trials.append(t)
+
+    def _persist(self, trial: Trial) -> None:
+        if not self.storage:
+            return
+        os.makedirs(os.path.dirname(self.storage) or ".", exist_ok=True)
+        with open(self.storage, "a") as f:
+            f.write(json.dumps({"kind": "trial", "trial": trial.to_dict()}) + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+
+    # -- ask / tell -------------------------------------------------------------
+
+    def ask(self) -> Trial:
+        trial = Trial(len(self.trials), self)
+        self.trials.append(trial)
+        self.sampler.on_trial_start(self, trial)
+        return trial
+
+    def tell(self, trial: Trial, values, state: TrialState = TrialState.COMPLETE) -> None:
+        if values is not None:
+            if isinstance(values, (int, float)):
+                values = (float(values),)
+            trial.values = tuple(float(v) for v in values)
+        trial.state = state
+        self._persist(trial)
+
+    # -- optimize ---------------------------------------------------------------
+
+    def optimize(self, objective: Callable[[Trial], object], n_trials: int,
+                 catch: Tuple = ()) -> None:
+        for _ in range(n_trials):
+            trial = self.ask()
+            try:
+                values = objective(trial)
+            except TrialPruned:
+                self.tell(trial, None, TrialState.PRUNED)
+                continue
+            except HardConstraintViolated as e:
+                trial.set_user_attr("violated", {"name": e.name, "value": e.value, "limit": e.limit})
+                self.tell(trial, None, TrialState.INFEASIBLE)
+                continue
+            except catch as e:  # noqa: B030 — user-supplied exception classes
+                trial.set_user_attr("error", repr(e))
+                self.tell(trial, None, TrialState.FAIL)
+                continue
+            self.tell(trial, values)
+
+    # -- results ---------------------------------------------------------------
+
+    @property
+    def completed_trials(self) -> List[Trial]:
+        return [t for t in self.trials if t.state == TrialState.COMPLETE and t.values]
+
+    @property
+    def best_trial(self) -> Optional[Trial]:
+        done = self.completed_trials
+        if not done:
+            return None
+        sign = 1.0 if self.directions[0] == "minimize" else -1.0
+        return min(done, key=lambda t: sign * t.values[0])
+
+    @property
+    def best_trials(self) -> List[Trial]:
+        """Pareto-optimal set under all directions."""
+        return pareto_front(self.trials, self.directions)

@@ -1,0 +1,62 @@
+"""Losses.  Cross-entropy upcasts logits to f32; a chunked variant bounds
+the (B, S, vocab) logit materialization for 150k+ vocabularies."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(logits, labels, mask=None):
+    """logits: (B, S, V); labels: (B, S) int32.  Mean over unmasked tokens."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def chunked_cross_entropy(h, head_w, labels, *, chunk: int = 1024, mask=None,
+                          transposed: bool = False, unroll: bool = False):
+    """Cross-entropy without materializing all logits.
+
+    h: (B, S, D) final hidden states; head_w: (D, V), or (V, D) with
+    ``transposed=True`` (tied embeddings).  Computes per-chunk logits
+    inside a scan — peak memory drops from O(S*V) to O(chunk*V).
+    """
+    b, s, d = h.shape
+    assert s % chunk == 0, (s, chunk)
+    n = s // chunk
+    hc = h.reshape(b, n, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, n, chunk).transpose(1, 0, 2)
+    mc = None if mask is None else mask.reshape(b, n, chunk).transpose(1, 0, 2)
+
+    def body(carry, inp):
+        if mc is None:
+            hi, li = inp
+            mi = jnp.ones_like(li, jnp.float32)
+        else:
+            hi, li, mi = inp
+        if transposed:
+            logits = jnp.einsum("bsd,vd->bsv", hi, head_w).astype(jnp.float32)
+        else:
+            logits = (hi @ head_w).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * mi
+        total, count = carry
+        return (total + jnp.sum(nll), count + jnp.sum(mi)), None
+
+    xs = (hc, lc) if mc is None else (hc, lc, mc)
+    (total, count), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())), xs,
+                                     unroll=n if unroll else 1)
+    return total / jnp.maximum(count, 1.0)
+
+
+def shift_labels(tokens):
+    """Next-token prediction: labels[t] = tokens[t+1]; last position masked."""
+    labels = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    mask = jnp.ones_like(tokens, jnp.float32).at[:, -1].set(0.0)
+    return labels, mask

@@ -1,0 +1,166 @@
+"""Optimizers (AdamW / SGD-momentum / Adafactor) as pure update rules.
+
+State trees mirror the parameter tree, so parameter shardings apply
+verbatim to optimizer state (fully sharded optimizer — ZeRO-style when the
+params are FSDP-sharded over the data axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"
+    learning_rate: Union[float, Callable[[jnp.ndarray], jnp.ndarray]] = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: Optional[float] = 1.0
+    momentum: float = 0.9  # sgd
+    # adafactor
+    decay_rate: float = 0.8
+    state_dtype = jnp.float32
+
+
+def _lr_at(cfg: OptimizerConfig, step):
+    lr = cfg.learning_rate
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+class Optimizer:
+    """Bundles init/update; pure functions of (grads, state, params)."""
+
+    def __init__(self, cfg: OptimizerConfig):
+        self.cfg = cfg
+
+    def init(self, params):
+        cfg = self.cfg
+        zeros_like = lambda p: jnp.zeros_like(p, dtype=cfg.state_dtype)
+        if cfg.name == "adamw":
+            return {
+                "step": jnp.zeros((), jnp.int32),
+                "mu": jax.tree_util.tree_map(zeros_like, params),
+                "nu": jax.tree_util.tree_map(zeros_like, params),
+            }
+        if cfg.name == "sgd":
+            return {
+                "step": jnp.zeros((), jnp.int32),
+                "mu": jax.tree_util.tree_map(zeros_like, params),
+            }
+        if cfg.name == "adafactor":
+            def factored(p):
+                if p.ndim >= 2:
+                    return {
+                        "row": jnp.zeros(p.shape[:-1], cfg.state_dtype),
+                        "col": jnp.zeros(p.shape[:-2] + p.shape[-1:], cfg.state_dtype),
+                    }
+                return {"full": zeros_like(p)}
+
+            return {
+                "step": jnp.zeros((), jnp.int32),
+                "v": jax.tree_util.tree_map(factored, params),
+            }
+        raise ValueError(self.cfg.name)
+
+    def update(self, grads, state, params):
+        cfg = self.cfg
+        step = state["step"] + 1
+        lr = _lr_at(cfg, step)
+        grad_norm = None
+        if cfg.grad_clip_norm is not None:
+            grads, grad_norm = clip_by_global_norm(grads, cfg.grad_clip_norm)
+
+        if cfg.name == "adamw":
+            bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+            bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+            def upd(p, g, mu, nu):
+                gf = g.astype(jnp.float32)
+                mu_n = cfg.b1 * mu + (1 - cfg.b1) * gf
+                nu_n = cfg.b2 * nu + (1 - cfg.b2) * jnp.square(gf)
+                mu_hat = mu_n / bc1
+                nu_hat = nu_n / bc2
+                delta = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+                return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu_n, nu_n
+
+            out = jax.tree_util.tree_map(upd, params, grads, state["mu"], state["nu"])
+            # out is a tree of 3-tuples; unzip
+            new_params = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+            new_mu = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+            new_nu = jax.tree_util.tree_map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+            new_state = {"step": step, "mu": new_mu, "nu": new_nu}
+            return new_params, new_state, {"lr": lr, "grad_norm": grad_norm}
+
+        if cfg.name == "sgd":
+            def upd(p, g, mu):
+                gf = g.astype(jnp.float32)
+                mu_n = cfg.momentum * mu + gf
+                return (p.astype(jnp.float32) - lr * mu_n).astype(p.dtype), mu_n
+
+            out = jax.tree_util.tree_map(upd, params, grads, state["mu"])
+            new_params = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+            new_mu = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+            return new_params, {"step": step, "mu": new_mu}, {"lr": lr, "grad_norm": grad_norm}
+
+        if cfg.name == "adafactor":
+            decay = 1.0 - (step.astype(jnp.float32)) ** -cfg.decay_rate
+
+            def upd(p, g, v):
+                gf = g.astype(jnp.float32)
+                g2 = jnp.square(gf) + 1e-30
+                if p.ndim >= 2:
+                    row = decay * v["row"] + (1 - decay) * jnp.mean(g2, axis=-1)
+                    col = decay * v["col"] + (1 - decay) * jnp.mean(g2, axis=-2)
+                    row_mean = jnp.mean(row, axis=-1, keepdims=True)
+                    r = (row / jnp.maximum(row_mean, 1e-30))[..., None]
+                    c = col[..., None, :]
+                    vhat = r * c
+                    new_v = {"row": row, "col": col}
+                else:
+                    full = decay * v["full"] + (1 - decay) * g2
+                    vhat = full
+                    new_v = {"full": full}
+                update = gf * jax.lax.rsqrt(vhat + 1e-30)
+                # relative step clipping
+                rms = jnp.sqrt(jnp.mean(jnp.square(update)))
+                update = update / jnp.maximum(1.0, rms)
+                newp = p.astype(jnp.float32) - lr * (update + cfg.weight_decay * p.astype(jnp.float32))
+                return newp.astype(p.dtype), new_v
+
+            is_v = lambda x: isinstance(x, dict) and ("row" in x or "full" in x)
+            out = jax.tree_util.tree_map(
+                lambda v, p, g: upd(p, g, v), state["v"], params, grads, is_leaf=is_v
+            )
+            new_params = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+            new_v = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+            return new_params, {"step": step, "v": new_v}, {"lr": lr, "grad_norm": grad_norm}
+
+        raise ValueError(cfg.name)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int, min_ratio: float = 0.1):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / max(1, warmup), 1.0)
+        progress = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * progress))
+        return base_lr * warm * (min_ratio + (1 - min_ratio) * cos)
+
+    return fn

@@ -1,0 +1,149 @@
+"""Train / serve step factories — the functions that get jit-ed + sharded.
+
+``make_train_step`` builds a pure step: (params, opt_state, batch) ->
+(params, opt_state, metrics), with optional microbatch gradient
+accumulation (lax.scan) and gradient compression with error feedback.
+Model-family differences (decoder-only / enc-dec / vlm-prefix) are
+absorbed by ``model_forward`` keyed on the batch contents.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.loss import cross_entropy, shift_labels
+from repro.train.optimizer import Optimizer
+
+
+def model_forward(model, params, batch):
+    """Dispatch on batch keys: tokens / frames (enc-dec) / patch_embeds."""
+    if "frames" in batch:
+        enc_out = model.encode(params, batch["frames"])
+        return model.apply(params, batch["tokens"], enc_out=enc_out)
+    if "patch_embeds" in batch:
+        return model.apply(params, batch["tokens"], prefix_embeds=batch["patch_embeds"])
+    return model.apply(params, batch["tokens"])
+
+
+def make_loss_fn(model, loss_chunk: int = 0, loss_unroll: bool = False):
+    """loss_chunk > 0 selects the chunked-logits path (the (B,S,vocab)
+    tensor never materializes — a §Perf memory-term lever for 150k+
+    vocabularies).  loss_unroll unrolls the chunk scan for the dry-run
+    cost variant (HloCostAnalysis counts while bodies once)."""
+
+    def loss_fn(params, batch):
+        if "labels" in batch:
+            labels, mask = batch["labels"], batch.get("loss_mask")
+        else:
+            labels, mask = shift_labels(batch["tokens"])
+        if loss_chunk and "frames" not in batch:
+            from repro.train.loss import chunked_cross_entropy
+
+            kwargs = {}
+            if "patch_embeds" in batch:
+                kwargs["prefix_embeds"] = batch["patch_embeds"]
+            h = model.hidden(params, batch["tokens"], **kwargs)
+            w, transposed = model.head_weight(params)
+            chunk = min(loss_chunk, h.shape[1])
+            while h.shape[1] % chunk:
+                chunk //= 2
+            return chunked_cross_entropy(h, w, labels, chunk=max(chunk, 1),
+                                         mask=mask, transposed=transposed,
+                                         unroll=loss_unroll)
+        logits = model_forward(model, params, batch)
+        return cross_entropy(logits, labels, mask)
+
+    return loss_fn
+
+
+def make_train_step(
+    model,
+    optimizer: Optimizer,
+    *,
+    microbatches: int = 1,
+    compressor=None,
+    loss_chunk: int = 0,
+    loss_unroll: bool = False,
+):
+    loss_fn = make_loss_fn(model, loss_chunk=loss_chunk, loss_unroll=loss_unroll)
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def train_step(params, opt_state, batch, compress_state=None):
+        if microbatches <= 1:
+            loss, grads = grad_fn(params, batch)
+        else:
+            def split_mb(x):
+                b = x.shape[0]
+                assert b % microbatches == 0, (b, microbatches)
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+            mbs = jax.tree_util.tree_map(split_mb, batch)
+
+            def accum(carry, mb):
+                loss_sum, grads_sum = carry
+                loss, grads = grad_fn(params, mb)
+                grads_sum = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32), grads_sum, grads
+                )
+                return (loss_sum + loss, grads_sum), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (loss, grads), _ = jax.lax.scan(accum, (jnp.zeros(()), zeros), mbs)
+            loss = loss / microbatches
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+
+        if compressor is not None:
+            grads, compress_state = compressor.compress_decompress(grads, compress_state)
+
+        params, opt_state, opt_metrics = optimizer.update(grads, opt_state, params)
+        metrics = {"loss": loss, **{k: v for k, v in opt_metrics.items() if v is not None}}
+        if compressor is not None:
+            return params, opt_state, metrics, compress_state
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model, last_only: bool = False):
+    """Full-sequence forward (inference prefill).
+
+    last_only=True returns only the final position's logits — serving
+    semantics (the sampler needs one next-token distribution); drops the
+    (B, S, vocab) logits buffer AND S-1/S of the LM-head matmul."""
+
+    def prefill_step(params, batch):
+        if last_only and "frames" not in batch:
+            kwargs = {}
+            if "patch_embeds" in batch:
+                kwargs["prefix_embeds"] = batch["patch_embeds"]
+            h = model.hidden(params, batch["tokens"], **kwargs)
+            h_last = h[:, -1:]
+            w, transposed = model.head_weight(params)
+            if transposed:
+                return jnp.einsum("bsd,vd->bsv", h_last, w)
+            return jnp.einsum("bsd,dv->bsv", h_last, w)
+        return model_forward(model, params, batch)
+
+    return prefill_step
+
+
+def make_decode_step(model):
+    """One-token decode against the KV/state cache."""
+
+    def decode_step(params, cache, tokens, pos):
+        return model.decode(params, cache, tokens, pos)
+
+    return decode_step
+
+
+def make_eval_step(model):
+    loss_fn = make_loss_fn(model)
+
+    def eval_step(params, batch):
+        return loss_fn(params, batch)
+
+    return eval_step

@@ -1,0 +1,96 @@
+"""Fault-tolerance utilities + data pipeline + generator reflection."""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.data.pipeline import Prefetcher, SyntheticClassificationData, SyntheticLMData
+from repro.distributed.fault import StragglerMonitor, elastic_remesh, with_retries
+from repro.hwgen.generator import XLAGenerator
+from repro.hwgen.targets import get_target
+
+
+def test_synthetic_lm_determinism_by_step():
+    """Any host can regenerate any step's batch — the property elastic
+    re-assignment and restarts rely on."""
+    a = SyntheticLMData(vocab=128, seq=16, global_batch=4, seed=7)
+    b = SyntheticLMData(vocab=128, seq=16, global_batch=4, seed=7)
+    for step in (0, 3, 11):
+        np.testing.assert_array_equal(a.batch_at(step)["tokens"], b.batch_at(step)["tokens"])
+    assert not np.array_equal(a.batch_at(0)["tokens"], a.batch_at(1)["tokens"])
+
+
+def test_synthetic_lm_host_sharding_disjoint():
+    h0 = SyntheticLMData(vocab=128, seq=16, global_batch=8, n_hosts=2, host_id=0)
+    h1 = SyntheticLMData(vocab=128, seq=16, global_batch=8, n_hosts=2, host_id=1)
+    b0, b1 = h0.batch_at(5), h1.batch_at(5)
+    assert b0["tokens"].shape == (4, 16)
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+
+
+def test_prefetcher_orders_steps_and_resumes():
+    data = SyntheticLMData(vocab=64, seq=8, global_batch=2)
+    pf = Prefetcher(data, start_step=10)
+    steps = [pf.next()[0] for _ in range(4)]
+    pf.close()
+    assert steps == [10, 11, 12, 13]
+    np.testing.assert_array_equal(
+        data.batch_at(10)["tokens"],
+        SyntheticLMData(vocab=64, seq=8, global_batch=2).batch_at(10)["tokens"],
+    )
+
+
+def test_straggler_monitor_flags_outliers():
+    mon = StragglerMonitor(window=16, threshold=2.0)
+    for _ in range(8):
+        assert not mon.record(0.1)
+    assert mon.record(1.0)  # 10x the median
+    assert mon.flags == 1
+
+
+def test_with_retries_recovers():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("transient")
+        return "ok"
+
+    assert with_retries(flaky, retries=3, backoff=0.0)() == "ok"
+    assert calls["n"] == 3
+
+
+def test_with_retries_exhausts():
+    def dead():
+        raise RuntimeError("permanent")
+
+    with pytest.raises(RuntimeError):
+        with_retries(dead, retries=1, backoff=0.0)()
+
+
+def test_elastic_remesh_fits_device_pool():
+    mesh = elastic_remesh((16, 16), ("data", "model"))
+    n = len(jax.devices())
+    assert int(np.prod(mesh.devices.shape)) <= n
+    assert mesh.axis_names == ("data", "model")
+
+
+def test_generator_reflection_capabilities():
+    gen = XLAGenerator("host_cpu")
+    caps = gen.capabilities()
+    assert caps["pallas"] is False  # host backend reports no Pallas
+    assert "linear" in caps["ops"] and "conv1d" in caps["ops"]
+    tpu = get_target("tpu_v5e_pod")
+    assert tpu.supports_pallas and tpu.n_chips == 256
+    assert tpu.chip.hbm_bytes == 16 * 1024 ** 3
+
+
+def test_classification_data_learnable_structure():
+    """Class-dependent amplitude must be visible to a trivial statistic."""
+    data = SyntheticClassificationData(n=200, length=64, channels=2, classes=4, seed=1)
+    power = (data.x ** 2).mean(axis=(1, 2))
+    lo = power[data.y == 0].mean()
+    hi = power[data.y == 3].mean()
+    assert hi > lo * 1.5

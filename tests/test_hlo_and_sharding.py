@@ -1,0 +1,119 @@
+"""HLO collective parser + logical-axis sharding resolver (pure logic)."""
+import types
+
+import pytest
+from jax.sharding import PartitionSpec
+
+from repro.distributed.sharding import default_rules, partition_spec
+from repro.hwgen.hlo_analysis import analyze_collectives, total_collective_bytes
+from repro.hwgen.roofline import roofline_terms
+from repro.hwgen.targets import TPU_V5E
+
+SAMPLE_HLO = """
+HloModule jit_f, is_scheduled=true
+
+%region_0.body (arg: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = f32[8,16]{1,0} parameter(0)
+  %all-gather.1 = f32[8,64]{1,0} all-gather(%p), channel_id=1, replica_groups=[2,4]<=[8]
+  %c9 = s32[] constant(7)
+}
+
+%region_1.cond (arg: (s32[], f32[8,16])) -> pred[] {
+  %gte = s32[] get-tuple-element(%arg), index=0
+  %trip = s32[] constant(12)
+  ROOT %cmp = pred[] compare(%gte, %trip), direction=LT
+}
+
+ENTRY %main (a: f32[8,16], b: f32[16,16]) -> f32[8,16] {
+  %a = f32[8,16]{1,0} parameter(0)
+  %b = f32[16,16]{1,0} parameter(1)
+  %all-reduce = f32[8,16]{1,0} all-reduce(%a), channel_id=2, replica_groups=[1,8]<=[8], to_apply=%add
+  %t = (s32[], f32[8,16]) tuple(%c0, %all-reduce)
+  %w = (s32[], f32[8,16]) while(%t), condition=%region_1.cond, body=%region_0.body
+  ROOT %out = f32[8,16]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_collective_parser_counts_and_bytes():
+    st = analyze_collectives(SAMPLE_HLO)
+    # all-reduce in ENTRY: 8*16*4 = 512 bytes, once
+    assert st["all-reduce"]["count"] == 1
+    assert st["all-reduce"]["bytes"] == 512
+    # all-gather inside while body: operand f32[8,16] = 512 bytes x trip 12
+    assert st["all-gather"]["count"] == 12
+    assert st["all-gather"]["bytes"] == 512 * 12
+    assert total_collective_bytes(st) == 512 + 512 * 12
+
+
+def test_parser_ignores_done_ops():
+    txt = """
+ENTRY %main (a: f32[4]) -> f32[4] {
+  %a = f32[4]{0} parameter(0)
+  %ag-start = (f32[4], f32[16]) all-gather-start(%a), channel_id=1
+  %ag-done = f32[16]{0} all-gather-done(%ag-start)
+}
+"""
+    st = analyze_collectives(txt)
+    assert st["all-gather"]["count"] == 1  # start only
+    assert st["all-gather"]["bytes"] == 16
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+def test_partition_spec_basic():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    rules = {"embed": ("data",), "mlp": ("model",)}
+    ps = partition_spec(("embed", "mlp"), (1024, 4096), mesh, rules)
+    assert ps == PartitionSpec("data", "model")
+
+
+def test_partition_spec_divisibility_fallback():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    rules = {"kv_heads": ("model",), "embed": ("data",)}
+    # 8 kv heads cannot shard over 16 -> replicated
+    ps = partition_spec(("embed", "kv_heads"), (2048, 8), mesh, rules)
+    assert ps == PartitionSpec("data", None)
+
+
+def test_partition_spec_no_axis_reuse():
+    mesh = FakeMesh({"data": 4, "model": 4})
+    rules = {"a": ("model",), "b": ("model",)}
+    ps = partition_spec(("a", "b"), (64, 64), mesh, rules)
+    assert ps == PartitionSpec("model", None)  # second use dropped
+
+
+def test_partition_spec_multi_axis_batch():
+    mesh = FakeMesh({"pod": 2, "data": 16, "model": 16})
+    rules = {"batch": ("pod", "data")}
+    ps = partition_spec(("batch", None), (256, 4096), mesh, rules)
+    assert ps == PartitionSpec(("pod", "data"), None)
+    # batch=24 not divisible by 32 -> replicated
+    ps2 = partition_spec(("batch", None), (24, 4096), mesh, rules)
+    assert ps2 == PartitionSpec(None, None)
+
+
+def test_default_rules_cover_expected_axes():
+    mesh = FakeMesh({"pod": 2, "data": 16, "model": 16})
+    rules = default_rules(mesh)
+    for name in ("batch", "embed", "mlp", "heads", "kv_heads", "vocab", "experts", "kv_seq"):
+        assert name in rules
+
+
+def test_roofline_dominant_term():
+    r = roofline_terms(hlo_flops=1e15, hlo_bytes=1e12, collective_bytes=1e11,
+                       n_chips=1, chip=TPU_V5E, cell="x")
+    assert r.compute_s == pytest.approx(1e15 / 197e12)
+    assert r.memory_s == pytest.approx(1e12 / 819e9)
+    assert r.collective_s == pytest.approx(1e11 / 50e9)
+    assert r.dominant == "compute"
+    assert r.roofline_fraction == 1.0
+
+    r2 = roofline_terms(hlo_flops=1e12, hlo_bytes=1e13, collective_bytes=0,
+                        n_chips=1, chip=TPU_V5E)
+    assert r2.dominant == "memory"
+    assert r2.roofline_fraction < 1.0

@@ -1,0 +1,152 @@
+"""Per-kernel validation: shape/dtype sweeps vs pure-jnp oracles
+(interpret mode executes the kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("s,h,kh,d", [(128, 4, 2, 64), (256, 2, 2, 32), (128, 8, 1, 64)])
+def test_flash_attention_sweep(s, h, kh, d, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = _rand(ks[0], (2, s, h, d), dtype)
+    k = _rand(ks[1], (2, s, kh, d), dtype)
+    v = _rand(ks[2], (2, s, kh, d), dtype)
+    out = ops.flash_attention(q, k, v, causal=True, block_q=64, block_kv=64)
+    want = ref.flash_attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+        causal=True,
+    ).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(want, np.float32),
+                               atol=4 * _tol(dtype), rtol=4 * _tol(dtype))
+
+
+def test_flash_attention_sliding_window():
+    ks = jax.random.split(KEY, 3)
+    q = _rand(ks[0], (1, 256, 4, 32), jnp.float32)
+    k = _rand(ks[1], (1, 256, 2, 32), jnp.float32)
+    v = _rand(ks[2], (1, 256, 2, 32), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True, window=64, block_q=64, block_kv=64)
+    want = ref.flash_attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+        causal=True, window=64,
+    ).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-4, rtol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    s=st.sampled_from([64, 128, 192]),
+    heads=st.sampled_from([(2, 1), (4, 2), (4, 4)]),
+    d=st.sampled_from([32, 64]),
+)
+def test_flash_attention_property(s, heads, d):
+    h, kh = heads
+    ks = jax.random.split(jax.random.PRNGKey(s * h * d), 3)
+    q = _rand(ks[0], (1, s, h, d), jnp.float32)
+    k = _rand(ks[1], (1, s, kh, d), jnp.float32)
+    v = _rand(ks[2], (1, s, kh, d), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True, block_q=64, block_kv=64)
+    want = ref.flash_attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+        causal=True,
+    ).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# ssm scan (mamba2 / SSD)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("l,h,p,g,n,chunk", [
+    (64, 4, 32, 2, 16, 16), (128, 2, 64, 1, 32, 32), (96, 3, 16, 3, 8, 16),
+])
+def test_ssm_scan_sweep(l, h, p, g, n, chunk, dtype):
+    ks = jax.random.split(KEY, 5)
+    x = _rand(ks[0], (2, l, h, p), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (2, l, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    bm = _rand(ks[3], (2, l, g, n), dtype)
+    cm = _rand(ks[4], (2, l, g, n), dtype)
+    y, st_ = ops.ssm_scan(x, dt, a, bm, cm, chunk=chunk)
+    yref, stref = ref.ssm_scan_ref(
+        x, dt, a, jnp.repeat(bm, h // g, 2), jnp.repeat(cm, h // g, 2), chunk=chunk
+    )
+    np.testing.assert_allclose(np.asarray(y, np.float32), np.asarray(yref, np.float32),
+                               atol=8 * _tol(dtype), rtol=8 * _tol(dtype))
+    np.testing.assert_allclose(np.asarray(st_), np.asarray(stref),
+                               atol=8 * _tol(dtype), rtol=8 * _tol(dtype))
+
+
+def test_ssm_scan_matches_recurrence():
+    """Chunked kernel == step-by-step recurrence (the strictest oracle)."""
+    from repro.nn.ssm import ssd_recurrent_step
+
+    l, h, p, n = 32, 2, 16, 8
+    ks = jax.random.split(KEY, 5)
+    x = _rand(ks[0], (1, l, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (1, l, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    bm = _rand(ks[3], (1, l, 1, n), jnp.float32)
+    cm = _rand(ks[4], (1, l, 1, n), jnp.float32)
+    y, _ = ops.ssm_scan(x, dt, a, bm, cm, chunk=8)
+    state = jnp.zeros((1, h, n, p))
+    outs = []
+    for t in range(l):
+        yt, state = ssd_recurrent_step(state, x[:, t], dt[:, t], a, bm[:, t], cm[:, t])
+        outs.append(yt[:, None])
+    want = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), atol=1e-4, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# mlstm scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("l,h,p,chunk", [(64, 2, 32, 16), (128, 4, 16, 32)])
+def test_mlstm_scan_sweep(l, h, p, chunk):
+    ks = jax.random.split(KEY, 5)
+    q = _rand(ks[0], (2, l, h, p), jnp.float32)
+    k = _rand(ks[1], (2, l, h, p), jnp.float32)
+    v = _rand(ks[2], (2, l, h, p), jnp.float32)
+    il = jax.random.normal(ks[3], (2, l, h)) * 2.0
+    fl = jax.nn.log_sigmoid(jax.random.normal(ks[4], (2, l, h)) + 3.0)
+    hout, _ = ops.mlstm_scan(q, k, v, il, fl, chunk=chunk)
+    want = ref.mlstm_scan_ref(q, k, v, il, fl)
+    np.testing.assert_allclose(np.asarray(hout), np.asarray(want), atol=2e-4, rtol=2e-3)
+
+
+@settings(max_examples=6, deadline=None)
+@given(chunk=st.sampled_from([8, 16, 32]), gate_bias=st.sampled_from([-2.0, 1.0, 5.0]))
+def test_mlstm_chunk_invariance(chunk, gate_bias):
+    """Output must not depend on the chunk size (pure reformulation)."""
+    l, h, p = 64, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(int(gate_bias * 10) + chunk), 5)
+    q = _rand(ks[0], (1, l, h, p), jnp.float32)
+    k = _rand(ks[1], (1, l, h, p), jnp.float32)
+    v = _rand(ks[2], (1, l, h, p), jnp.float32)
+    il = jax.random.normal(ks[3], (1, l, h))
+    fl = jax.nn.log_sigmoid(jax.random.normal(ks[4], (1, l, h)) + gate_bias)
+    h1, _ = ops.mlstm_scan(q, k, v, il, fl, chunk=chunk)
+    want = ref.mlstm_scan_ref(q, k, v, il, fl)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(want), atol=3e-4, rtol=3e-3)

@@ -1,0 +1,149 @@
+"""Per-arch smoke tests: reduced same-family config, one forward + one
+train step on CPU, asserting output shapes and finiteness (assignment
+requirement f)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_arch
+from repro.models.lm import LM
+from repro.nn.types import split
+from repro.train.optimizer import Optimizer, OptimizerConfig
+from repro.train.step import make_train_step
+
+ARCH_NAMES = sorted(ARCHS)
+
+
+def _batch_for(arch, spec, b=2, s=16):
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": rng.integers(0, spec.vocab, (b, s)).astype(np.int32),
+        "labels": rng.integers(0, spec.vocab, (b, s)).astype(np.int32),
+    }
+    if arch.batch_kind == "encdec":
+        batch["frames"] = rng.standard_normal((b, s, spec.d_model)).astype(np.float32)
+    if arch.batch_kind == "vlm":
+        npfx = min(spec.num_prefix_tokens, s // 2)
+        batch["patch_embeds"] = rng.standard_normal((b, npfx, spec.d_model)).astype(np.float32)
+    return batch
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_smoke_forward(name):
+    arch = get_arch(name)
+    spec = arch.smoke_spec_fn()
+    model = LM(spec)
+    params, _ = split(model.init(jax.random.PRNGKey(0), dtype=jnp.float32))
+    batch = _batch_for(arch, spec)
+    if arch.batch_kind == "encdec":
+        enc = model.encode(params, jnp.asarray(batch["frames"]))
+        logits = model.apply(params, batch["tokens"], enc_out=enc)
+    elif arch.batch_kind == "vlm":
+        logits = model.apply(params, batch["tokens"], prefix_embeds=jnp.asarray(batch["patch_embeds"]))
+    else:
+        logits = model.apply(params, batch["tokens"])
+    assert logits.shape == (2, 16, spec.vocab)
+    assert jnp.isfinite(logits).all(), f"{name}: non-finite logits"
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_smoke_train_step(name):
+    arch = get_arch(name)
+    spec = arch.smoke_spec_fn()
+    model = LM(spec)
+    params, _ = split(model.init(jax.random.PRNGKey(0), dtype=jnp.float32))
+    opt = Optimizer(OptimizerConfig(name="adamw", learning_rate=1e-3))
+    opt_state = opt.init(params)
+    step = jax.jit(make_train_step(model, opt))
+    batch = _batch_for(arch, spec)
+    new_params, new_opt, metrics = step(params, opt_state, batch)
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss) and loss > 0
+    # params actually changed
+    moved = jax.tree_util.tree_reduce(
+        lambda acc, pair: acc or bool(jnp.any(pair)),
+        jax.tree_util.tree_map(lambda a, b: jnp.any(a != b), params, new_params),
+        False,
+    )
+    assert moved, f"{name}: train step did not update params"
+
+
+@pytest.mark.parametrize("name", ["qwen3-1.7b", "zamba2-2.7b", "xlstm-1.3b", "whisper-medium"])
+def test_smoke_decode_step(name):
+    arch = get_arch(name)
+    spec = arch.smoke_spec_fn()
+    model = LM(spec)
+    params, _ = split(model.init(jax.random.PRNGKey(0), dtype=jnp.float32))
+    enc_out = None
+    if arch.batch_kind == "encdec":
+        enc_out = model.encode(params, jnp.zeros((2, 8, spec.d_model)))
+    cache = model.init_cache(params, 2, 16, enc_out=enc_out, dtype=jnp.float32)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    logits, cache = model.decode(params, cache, tok, 0)
+    assert logits.shape == (2, 1, spec.vocab)
+    assert jnp.isfinite(logits).all()
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_smoke_bf16_dtype_discipline(name):
+    """bf16 params must not leak f32 into the residual stream (scan
+    carries reject dtype drift — this guards the dry-run configs)."""
+    arch = get_arch(name)
+    spec = arch.smoke_spec_fn()
+    model = LM(spec)
+    params, _ = split(model.init(jax.random.PRNGKey(0), dtype=jnp.bfloat16))
+    toks = jnp.zeros((2, 16), jnp.int32)
+    if arch.batch_kind == "encdec":
+        enc = model.encode(params, jnp.zeros((2, 16, spec.d_model), jnp.bfloat16))
+        logits = model.apply(params, toks, enc_out=enc)
+    elif arch.batch_kind == "vlm":
+        logits = model.apply(params, toks,
+                             prefix_embeds=jnp.zeros((2, 4, spec.d_model), jnp.bfloat16))
+    else:
+        logits = model.apply(params, toks)
+    assert jnp.isfinite(logits.astype(jnp.float32)).all()
+
+
+def test_full_specs_construct_without_allocation():
+    """Full (non-smoke) configs must build ShapeDtypeStructs quickly."""
+    import functools
+
+    for name in ARCH_NAMES:
+        arch = get_arch(name)
+        spec = arch.spec()
+        model = LM(spec)
+        sds = jax.eval_shape(functools.partial(model.init, dtype=jnp.bfloat16),
+                             jax.random.PRNGKey(0))
+        params, _ = split(sds)
+        n = sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+        assert n > 1e8, f"{name}: full config suspiciously small ({n:,})"
+
+
+def test_param_counts_near_published():
+    """Sanity: derived param counts are in the right ballpark."""
+    import functools
+
+    expect = {
+        "qwen3-1.7b": (1.4e9, 2.3e9),
+        "phi4-mini-3.8b": (3.3e9, 4.2e9),
+        "nemotron-4-340b": (3.0e11, 4.0e11),
+        "qwen1.5-4b": (3.0e9, 5.0e9),
+        "dbrx-132b": (1.1e11, 1.5e11),
+        "arctic-480b": (4.0e11, 5.5e11),
+        "paligemma-3b": (2.0e9, 3.5e9),
+        # per-head block-diagonal qkv (official BlockLinear); the remaining
+        # delta vs 1.3B is the assignment's unverified-config headroom
+        "xlstm-1.3b": (1.2e9, 2.3e9),
+        "zamba2-2.7b": (2.0e9, 3.4e9),
+        # + learned 64k-position tables for the 32k decode cells
+        "whisper-medium": (5.5e8, 1.0e9),
+    }
+    for name, (lo, hi) in expect.items():
+        arch = get_arch(name)
+        model = LM(arch.spec())
+        sds = jax.eval_shape(functools.partial(model.init, dtype=jnp.bfloat16),
+                             jax.random.PRNGKey(0))
+        params, _ = split(sds)
+        n = sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+        assert lo <= n <= hi, f"{name}: {n:,} outside [{lo:,.0f}, {hi:,.0f}]"

@@ -1,0 +1,119 @@
+"""§Perf optimization paths must be EXACT reformulations (same math)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.lm import LM
+from repro.models.specs import ModelSpec, transformer_layer
+from repro.nn.attention import chunked_attention, grouped_attention, make_mask
+from repro.nn.types import split
+from repro.train.step import make_loss_fn, make_prefill_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("kv_chunk,unroll", [(32, False), (64, True), (128, False)])
+def test_chunked_attention_matches_full(kv_chunk, unroll):
+    ks = jax.random.split(KEY, 3)
+    b, s, h, k_, d = 2, 128, 4, 2, 32
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, k_, d))
+    v = jax.random.normal(ks[2], (b, s, k_, d))
+    full = grouped_attention(q, k, v, make_mask(s, s, True, None), d ** -0.5)
+    chunk = chunked_attention(q, k, v, d ** -0.5, causal=True,
+                              kv_chunk=kv_chunk, unroll=unroll)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(chunk), atol=2e-5, rtol=2e-5)
+
+
+def test_chunked_attention_window():
+    ks = jax.random.split(KEY, 3)
+    b, s, h, d = 1, 128, 2, 16
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, h, d))
+    v = jax.random.normal(ks[2], (b, s, h, d))
+    full = grouped_attention(q, k, v, make_mask(s, s, True, 24), d ** -0.5)
+    chunk = chunked_attention(q, k, v, d ** -0.5, causal=True, window=24, kv_chunk=32)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(chunk), atol=2e-5, rtol=2e-5)
+
+
+def _tiny_model(tie=True):
+    spec = ModelSpec(name="t", d_model=32, vocab=64,
+                     layers=(transformer_layer(32, 2, 2, 64),) * 2,
+                     tie_embeddings=tie, remat=False)
+    model = LM(spec)
+    params, _ = split(model.init(KEY, jnp.float32))
+    return model, params
+
+
+@pytest.mark.parametrize("tie", [True, False])
+def test_chunked_loss_matches_full(tie):
+    model, params = _tiny_model(tie)
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, 64),
+        "labels": jax.random.randint(jax.random.PRNGKey(2), (2, 32), 0, 64),
+    }
+    full = make_loss_fn(model)(params, batch)
+    for chunk in (8, 16):
+        got = make_loss_fn(model, loss_chunk=chunk)(params, batch)
+        np.testing.assert_allclose(float(full), float(got), rtol=1e-5)
+    # unrolled variant identical too
+    got_u = make_loss_fn(model, loss_chunk=8, loss_unroll=True)(params, batch)
+    np.testing.assert_allclose(float(full), float(got_u), rtol=1e-5)
+
+
+def test_chunked_loss_gradients_match():
+    model, params = _tiny_model()
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 64),
+        "labels": jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0, 64),
+    }
+    g_full = jax.grad(make_loss_fn(model))(params, batch)
+    g_chunk = jax.grad(make_loss_fn(model, loss_chunk=4))(params, batch)
+    diffs = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), g_full, g_chunk)
+    assert max(jax.tree_util.tree_leaves(diffs)) < 1e-5
+
+
+def test_last_logit_prefill_matches_full_last_position():
+    model, params = _tiny_model()
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 64)}
+    full = make_prefill_step(model, last_only=False)(params, batch)
+    last = make_prefill_step(model, last_only=True)(params, batch)
+    np.testing.assert_allclose(np.asarray(full[:, -1:]), np.asarray(last),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_remat_dots_same_loss():
+    import dataclasses
+
+    spec = ModelSpec(name="t", d_model=32, vocab=64,
+                     layers=(transformer_layer(32, 2, 2, 64),) * 3,
+                     remat=True)
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 64),
+        "labels": jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0, 64),
+    }
+    losses = {}
+    for policy in (None, "dots"):
+        m = LM(dataclasses.replace(spec, remat_policy=policy))
+        params, _ = split(m.init(KEY, jnp.float32))
+        losses[policy] = float(make_loss_fn(m)(params, batch))
+    np.testing.assert_allclose(losses[None], losses["dots"], rtol=1e-6)
+
+
+def test_moe_2d_sharding_axes():
+    """shard_ff flips expert-weight logical axes (2D expert sharding)."""
+    from repro.nn.moe import MoEConfig, moe_init
+    from repro.nn.types import split as split_tree
+
+    base = moe_init(MoEConfig(16, 32, 4, 2), KEY)
+    twod = moe_init(MoEConfig(16, 32, 4, 2, shard_ff=True), KEY)
+    _, ax_base = split_tree(base)
+    _, ax_2d = split_tree(twod)
+    assert ax_base["w_up"] == ("experts", "embed", "mlp")
+    assert ax_2d["w_up"] == ("experts", None, "expert_mlp")
+    # numerics identical
+    vb, _ = split_tree(base)
+    v2, _ = split_tree(twod)
+    np.testing.assert_array_equal(np.asarray(vb["w_up"]), np.asarray(v2["w_up"]))

@@ -1,0 +1,97 @@
+"""Pre-processing design space (paper §IV-E)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.preprocess import build_preprocessing, build_stage
+
+
+def test_downsample():
+    fn, shape = build_stage({"stage": "downsample", "factor": 4}, (64, 2))
+    assert shape == (16, 2)
+    x = jnp.arange(64.0)[None, :, None] * jnp.ones((1, 1, 2))
+    assert fn(x).shape == (1, 16, 2)
+    np.testing.assert_array_equal(np.asarray(fn(x)[0, :, 0]), np.arange(0, 64, 4))
+
+
+def test_sequential_window():
+    fn, shape = build_stage({"stage": "window", "size": 16, "offset": 8}, (64, 3))
+    assert shape == (16, 3)
+    x = jnp.arange(64.0)[None, :, None] * jnp.ones((1, 1, 3))
+    np.testing.assert_array_equal(np.asarray(fn(x)[0, :, 0]), np.arange(8, 24))
+
+
+def test_event_window_centers_on_energy():
+    fn, shape = build_stage({"stage": "event_window", "size": 16, "energy_window": 4}, (128, 1))
+    x = np.zeros((2, 128, 1), np.float32)
+    x[0, 60:64] = 5.0  # event near 62
+    x[1, 100:104] = 5.0
+    y = fn(jnp.asarray(x))
+    assert y.shape == (2, 16, 1)
+    assert float(jnp.sum(jnp.abs(y[0]))) > 0  # event captured in the crop
+    assert float(jnp.sum(jnp.abs(y[1]))) > 0
+
+
+def test_normalize_zscore():
+    fn, _ = build_stage({"stage": "normalize", "kind": "zscore"}, (32, 2))
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 32, 2)) * 7 + 3
+    y = fn(x)
+    np.testing.assert_allclose(np.asarray(jnp.mean(y, axis=1)), 0.0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(jnp.std(y, axis=1)), 1.0, atol=1e-4)
+
+
+def test_filter_lowpass_attenuates_high_freq():
+    fn, _ = build_stage({"stage": "filter", "taps": 63, "cutoff": 0.05, "kind": "lowpass"}, (256, 1))
+    t = jnp.arange(256.0)
+    lo = jnp.sin(2 * jnp.pi * 0.01 * t)
+    hi = jnp.sin(2 * jnp.pi * 0.4 * t)
+    x = (lo + hi)[None, :, None]
+    y = fn(x)[0, 64:192, 0]  # interior (edge effects)
+    resid = y - lo[64:192]
+    assert float(jnp.std(resid)) < 0.2 * float(jnp.std(hi))
+
+
+def test_pipeline_composition_and_shape():
+    stages = [
+        {"stage": "normalize", "kind": "zscore"},
+        {"stage": "filter", "taps": 15, "cutoff": 0.2, "kind": "lowpass"},
+        {"stage": "downsample", "factor": 2},
+        {"stage": "window", "size": 20, "offset": 0},
+    ]
+    fn, shape = build_preprocessing(stages, (128, 2))
+    assert shape == (20, 2)
+    x = jax.random.normal(jax.random.PRNGKey(0), (3, 128, 2))
+    assert fn(x).shape == (3, 20, 2)
+
+
+def test_empty_pipeline():
+    fn, shape = build_preprocessing([], (10, 1))
+    assert fn is None and shape == (10, 1)
+
+
+def test_joint_sampling_with_architecture():
+    from repro.core.space import parse_search_space
+    from repro.core.translate import sample_architecture
+    from repro.search import RandomSampler, Study
+
+    y = """
+input: [1, 64]
+output: 2
+sequence:
+  - block: "h"
+    op_candidates: "linear"
+preprocessing:
+  downsample:
+    factor: [1, 2, 4]
+  normalize:
+    kind: ["zscore", "minmax"]
+"""
+    space = parse_search_space(y)
+    study = Study(sampler=RandomSampler(seed=0))
+    factors = set()
+    for _ in range(10):
+        arch = sample_architecture(space, study.ask())
+        assert len(arch.preprocessing) == 2
+        factors.add([s for s in arch.preprocessing if s["stage"] == "downsample"][0]["factor"])
+    assert len(factors) > 1  # actually being searched

@@ -1,0 +1,152 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.builder import ModelBuilder
+from repro.core.space import parse_search_space
+from repro.core.translate import sample_architecture
+from repro.nn.moe import MoEConfig, moe_apply, moe_init, route_topk, _slot_assignment
+from repro.nn.rope import apply_rope
+from repro.nn.types import split
+from repro.search import RandomSampler, Study
+
+# ---------------------------------------------------------------------------
+# DSL -> builder: any sampled architecture from a well-formed space builds
+# and runs with the declared output shape
+# ---------------------------------------------------------------------------
+
+SPACE_TMPL = """
+input: [2, {length}]
+output: {out}
+sequence:
+  - block: "features"
+    op_candidates: ["conv-unit", "maxpool", "identity"]
+    type_repeat:
+      type: "{mode}"
+      depth: [1, 2, 3]
+  - block: "head"
+    op_candidates: "linear"
+    linear:
+      width: [8, 16]
+default_op_params:
+  conv1d:
+    kernel_size: [3, 5]
+    out_channels: [4, 8]
+    stride: [1, 2]
+  maxpool:
+    window: [2, 4]
+composites:
+  conv-unit:
+    sequence:
+      - block: "c"
+        op_candidates: "conv1d"
+      - block: "n"
+        op_candidates: ["layernorm", "identity"]
+"""
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    mode=st.sampled_from(["vary_all", "repeat_op", "repeat_params"]),
+    length=st.sampled_from([32, 48, 64]),
+    out=st.integers(2, 7),
+)
+def test_any_sampled_architecture_builds_and_runs(seed, mode, length, out):
+    space = parse_search_space(SPACE_TMPL.format(mode=mode, length=length, out=out))
+    study = Study(sampler=RandomSampler(seed=seed))
+    arch = sample_architecture(space, study.ask())
+    model = ModelBuilder(space.input_shape, space.output_dim).build(arch)
+    x = jnp.ones((2, length, 2))
+    params = model.init(jax.random.PRNGKey(seed))
+    y = model.apply(params, x)
+    assert y.shape == (2, out)
+    assert bool(jnp.isfinite(y).all())
+
+
+# ---------------------------------------------------------------------------
+# RoPE is an isometry per (position, head)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000), d=st.sampled_from([16, 32, 64]), s=st.sampled_from([4, 9]))
+def test_rope_preserves_norm(seed, d, s):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1, s, 2, d))
+    pos = jnp.arange(s)[None]
+    y = apply_rope(x, pos)
+    np.testing.assert_allclose(
+        np.asarray(jnp.linalg.norm(y, axis=-1)),
+        np.asarray(jnp.linalg.norm(x, axis=-1)),
+        rtol=1e-4,
+    )
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 1000),
+    e=st.sampled_from([4, 8]),
+    k=st.sampled_from([1, 2]),
+    s=st.sampled_from([8, 16]),
+)
+def test_moe_slot_assignment_invariants(seed, e, k, s):
+    key = jax.random.PRNGKey(seed)
+    logits = jax.random.normal(key, (2, s, e))
+    ids, gates, _ = route_topk(logits, k)
+    cap = max(1, int(k * s * 1.0 / e))
+    slot_token, token_slot = _slot_assignment(ids, e, cap)
+    st_np, tt_np = np.asarray(slot_token), np.asarray(token_slot)
+    for b in range(2):
+        # every filled slot points at a choice routed to that expert
+        for ei in range(e):
+            for c in range(cap):
+                f = st_np[b, ei, c]
+                if f >= 0:
+                    s_idx, k_idx = divmod(f, k)
+                    assert np.asarray(ids)[b, s_idx, k_idx] == ei
+        # no slot is assigned twice
+        filled = st_np[b][st_np[b] >= 0]
+        assert len(set(filled.tolist())) == len(filled)
+        # kept choices round-trip through their slot
+        for s_idx in range(s):
+            for k_idx in range(k):
+                c = tt_np[b, s_idx, k_idx]
+                if c >= 0:
+                    ei = np.asarray(ids)[b, s_idx, k_idx]
+                    assert st_np[b, ei, c] == s_idx * k + k_idx
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_moe_output_finite_and_gate_normalized(seed):
+    cfg = MoEConfig(d_model=16, d_ff=32, n_experts=4, top_k=2, capacity_factor=2.0)
+    params, _ = split(moe_init(cfg, jax.random.PRNGKey(seed)))
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (2, 8, 16))
+    y, aux = moe_apply(params, cfg, x, return_aux=True)
+    assert y.shape == x.shape
+    assert bool(jnp.isfinite(y).all())
+    assert 0.0 <= float(aux["dropped_fraction"]) <= 1.0
+    assert float(aux["load_balance_loss"]) >= 0.99  # >= 1 at perfect balance
+
+
+# ---------------------------------------------------------------------------
+# optimizer: zero grads + no weight decay = fixed point
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 100), name=st.sampled_from(["adamw", "sgd"]))
+def test_optimizer_zero_grad_fixed_point(seed, name):
+    from repro.train.optimizer import Optimizer, OptimizerConfig
+
+    opt = Optimizer(OptimizerConfig(name=name, learning_rate=0.1, weight_decay=0.0,
+                                    grad_clip_norm=None))
+    params = {"w": jax.random.normal(jax.random.PRNGKey(seed), (4, 4))}
+    state = opt.init(params)
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    new_params, _, _ = opt.update(zeros, state, params)
+    np.testing.assert_allclose(np.asarray(new_params["w"]), np.asarray(params["w"]), atol=1e-7)

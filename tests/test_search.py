@@ -1,0 +1,165 @@
+"""Search substrate: samplers, pruners, storage, Pareto."""
+import math
+import os
+
+import pytest
+
+from repro.search import (
+    GridSampler,
+    MedianPruner,
+    NSGA2Sampler,
+    RandomSampler,
+    RegularizedEvolutionSampler,
+    Study,
+    SuccessiveHalvingPruner,
+    TPESampler,
+    TrialPruned,
+    TrialState,
+)
+
+
+def quadratic(trial):
+    x = trial.suggest_float("x", -4.0, 4.0)
+    y = trial.suggest_float("y", -4.0, 4.0)
+    return (x - 1.0) ** 2 + (y + 0.5) ** 2
+
+
+def test_random_sampler_minimizes_eventually():
+    study = Study(sampler=RandomSampler(seed=0))
+    study.optimize(quadratic, 60)
+    assert study.best_trial.values[0] < 1.5
+
+
+def test_tpe_beats_random_on_quadratic():
+    r = Study(sampler=RandomSampler(seed=1))
+    r.optimize(quadratic, 80)
+    t = Study(sampler=TPESampler(seed=1, n_startup=10))
+    t.optimize(quadratic, 80)
+    assert t.best_trial.values[0] <= r.best_trial.values[0] * 1.5
+
+
+def test_evolution_improves_over_startup():
+    study = Study(sampler=RegularizedEvolutionSampler(seed=2, population=10))
+    study.optimize(quadratic, 80)
+    first10 = min(t.values[0] for t in study.completed_trials[:10])
+    assert study.best_trial.values[0] <= first10
+
+
+def test_grid_sampler_covers_grid():
+    study = Study(sampler=GridSampler())
+
+    seen = set()
+
+    def obj(trial):
+        a = trial.suggest_categorical("a", ["x", "y"])
+        b = trial.suggest_int("b", 0, 2)
+        seen.add((a, b))
+        return 0.0
+
+    study.optimize(obj, 6)
+    assert len(seen) == 6  # full 2x3 cartesian product
+
+
+def test_categorical_suggestion_consistency():
+    study = Study(sampler=RandomSampler(seed=0))
+    trial = study.ask()
+    v1 = trial.suggest_categorical("c", [1, 2, 3])
+    v2 = trial.suggest_categorical("c", [1, 2, 3])
+    assert v1 == v2  # same name -> same value within a trial
+
+
+def test_median_pruner_prunes_bad_trial():
+    study = Study(sampler=RandomSampler(seed=0), pruner=MedianPruner(n_startup_trials=2))
+    # seed two good completed trials with intermediate histories
+    for _ in range(2):
+        t = study.ask()
+        for s in (1, 2, 3):
+            t.report(s, 0.1 * s)
+        study.tell(t, 0.3)
+    bad = study.ask()
+    bad.report(1, 100.0)
+    assert bad.should_prune()
+
+
+def test_asha_pruner_promotes_top_fraction():
+    study = Study(sampler=RandomSampler(seed=0),
+                  pruner=SuccessiveHalvingPruner(min_resource=1, reduction_factor=2))
+    values = [1.0, 2.0, 3.0, 4.0]
+    for v in values:
+        t = study.ask()
+        t.report(1, v)
+        study.tell(t, v)
+    worst = study.ask()
+    worst.report(1, 10.0)
+    assert worst.should_prune()
+    best = study.ask()
+    best.report(1, 0.5)
+    assert not best.should_prune()
+
+
+def test_study_storage_resume(tmp_path):
+    path = os.path.join(tmp_path, "study.jsonl")
+    s1 = Study(sampler=RandomSampler(seed=0), storage=path)
+    s1.optimize(quadratic, 10)
+    best1 = s1.best_trial.values[0]
+    s2 = Study(sampler=RandomSampler(seed=1), storage=path)
+    assert len(s2.trials) == 10
+    assert s2.best_trial.values[0] == best1
+    s2.optimize(quadratic, 5)
+    assert len(s2.trials) == 15
+
+
+def test_pruned_trials_recorded():
+    study = Study(sampler=RandomSampler(seed=0))
+
+    def obj(trial):
+        trial.suggest_float("x", 0, 1)
+        raise TrialPruned()
+
+    study.optimize(obj, 3)
+    assert all(t.state == TrialState.PRUNED for t in study.trials)
+    assert study.best_trial is None
+
+
+def test_multiobjective_pareto_front():
+    study = Study(sampler=RandomSampler(seed=0), directions=("minimize", "minimize"))
+
+    def obj(trial):
+        x = trial.suggest_float("x", 0.0, 1.0)
+        return x, 1.0 - x  # every point is Pareto-optimal
+
+    study.optimize(obj, 12)
+    assert len(study.best_trials) == 12
+
+    study2 = Study(sampler=RandomSampler(seed=0), directions=("minimize", "minimize"))
+
+    def obj2(trial):
+        x = trial.suggest_float("x", 0.0, 1.0)
+        return x, x  # totally ordered: single non-dominated point
+
+    study2.optimize(obj2, 12)
+    assert len(study2.best_trials) == 1
+
+
+def test_nsga2_runs_multiobjective():
+    study = Study(sampler=NSGA2Sampler(seed=0, population=8),
+                  directions=("minimize", "minimize"))
+
+    def obj(trial):
+        x = trial.suggest_float("x", -2.0, 2.0)
+        return x ** 2, (x - 1.0) ** 2
+
+    study.optimize(obj, 40)
+    front = study.best_trials
+    assert front
+    xs = [t.params["x"] for t in front]
+    assert all(-0.5 <= x <= 1.5 for x in xs)  # front lies between optima
+
+
+def test_int_log_suggestion_bounds():
+    study = Study(sampler=RandomSampler(seed=0))
+    for _ in range(20):
+        t = study.ask()
+        v = t.suggest_int("n", 1, 1024, log=True)
+        assert 1 <= v <= 1024
+        study.tell(t, 0.0)

@@ -1,0 +1,154 @@
+"""Unit tests for the YAML search-space DSL (paper §IV, Listings 1-3)."""
+import pytest
+
+from repro.core.space import SpaceError, parse_search_space
+
+LISTING3 = """
+input: [4, 1250]
+output: 6
+sequence:
+  - block: "features"
+    op_candidates: "conv-block"
+    type_repeat:
+      type: "vary_all"
+      depth: [1, 2, 3, 4, 5, 6]
+  - block: "head"
+    op_candidates: "linear"
+    linear:
+      width: [32, 64, 128]
+default_op_params:
+  conv1d:
+    kernel_size: [3, 5]
+    out_channels: [8, 16]
+composites:
+  conv-block:
+    sequence:
+      - block: "conv"
+        op_candidates: "conv1d"
+      - block: "pool"
+        op_candidates: ["maxpool", "identity"]
+"""
+
+
+def test_parse_listing3():
+    space = parse_search_space(LISTING3)
+    assert space.input_shape == (4, 1250)
+    assert space.output_dim == 6
+    assert [b.name for b in space.blocks] == ["features", "head"]
+    assert space.blocks[0].op_candidates == ["conv-block"]
+    assert space.blocks[0].repeat.mode == "vary_all"
+    assert space.blocks[0].repeat.depth == [1, 2, 3, 4, 5, 6]
+    assert "conv-block" in space.composites
+    assert [b.name for b in space.composites["conv-block"]] == ["conv", "pool"]
+
+
+def test_default_op_params_fallback_and_override():
+    space = parse_search_space(LISTING3)
+    conv_block = space.composites["conv-block"][0]
+    # global fallback
+    assert space.op_params(conv_block, "conv1d")["kernel_size"] == [3, 5]
+    # local override
+    head = space.blocks[1]
+    assert space.op_params(head, "linear")["width"] == [32, 64, 128]
+
+
+def test_local_overrides_global():
+    y = """
+input: [1, 8]
+output: 2
+sequence:
+  - block: "b"
+    op_candidates: "linear"
+    linear:
+      width: [7]
+default_op_params:
+  linear:
+    width: [9]
+    activation: ["relu"]
+"""
+    space = parse_search_space(y)
+    merged = space.op_params(space.blocks[0], "linear")
+    assert merged["width"] == [7]  # local wins
+    assert merged["activation"] == ["relu"]  # global fallback survives
+
+
+def test_missing_op_candidates_rejected():
+    with pytest.raises(SpaceError, match="op_candidates"):
+        parse_search_space("input: [1,8]\noutput: 2\nsequence:\n  - block: b\n")
+
+
+def test_duplicate_block_names_rejected():
+    y = """
+input: [1, 8]
+output: 2
+sequence:
+  - block: "b"
+    op_candidates: "linear"
+  - block: "b"
+    op_candidates: "linear"
+"""
+    with pytest.raises(SpaceError, match="duplicate"):
+        parse_search_space(y)
+
+
+def test_unknown_repeat_mode_rejected():
+    y = """
+input: [1, 8]
+output: 2
+sequence:
+  - block: "b"
+    op_candidates: "linear"
+    type_repeat:
+      type: "sometimes"
+"""
+    with pytest.raises(SpaceError, match="unknown repeat mode"):
+        parse_search_space(y)
+
+
+def test_repeat_block_requires_existing_ref():
+    y = """
+input: [1, 8]
+output: 2
+sequence:
+  - block: "b"
+    op_candidates: "linear"
+    type_repeat:
+      type: "repeat_block"
+      ref_block: "nope"
+      depth: 2
+"""
+    with pytest.raises(SpaceError, match="not a defined block"):
+        parse_search_space(y)
+
+
+def test_composite_cycle_rejected():
+    y = """
+input: [1, 8]
+output: 2
+sequence:
+  - block: "b"
+    op_candidates: "c1"
+composites:
+  c1:
+    sequence:
+      - block: "x"
+        op_candidates: "c2"
+  c2:
+    sequence:
+      - block: "y"
+        op_candidates: "c1"
+"""
+    with pytest.raises(SpaceError, match="cycle"):
+        parse_search_space(y)
+
+
+def test_preprocessing_section_parsed():
+    y = LISTING3 + """
+preprocessing:
+  normalize:
+    kind: ["zscore", "minmax"]
+  downsample:
+    factor: [1, 2, 4]
+"""
+    space = parse_search_space(y)
+    assert set(space.preprocessing) == {"normalize", "downsample"}

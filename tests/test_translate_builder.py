@@ -1,0 +1,185 @@
+"""Repeat-mode semantics (paper Table I), adapters, dynamic construction."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.builder import ModelBuilder
+from repro.core.registry import get_transition
+from repro.core.space import parse_search_space
+from repro.core.translate import sample_architecture
+from repro.search import RandomSampler, Study
+
+
+def _sample(yaml_text, seed=0):
+    space = parse_search_space(yaml_text)
+    study = Study(sampler=RandomSampler(seed=seed))
+    trial = study.ask()
+    return space, trial, sample_architecture(space, trial)
+
+
+BASE = """
+input: [2, 64]
+output: 3
+sequence:
+  - block: "body"
+    op_candidates: "conv1d"
+    type_repeat:
+      type: "{mode}"
+      depth: 4
+default_op_params:
+  conv1d:
+    kernel_size: [3, 5, 7]
+    out_channels: [4, 8, 16]
+"""
+
+
+def test_repeat_params_shares_everything():
+    space, trial, arch = _sample(BASE.format(mode="repeat_params"), seed=3)
+    assert len(arch.layers) == 4
+    assert len({(l.params["kernel_size"], l.params["out_channels"]) for l in arch.layers}) == 1
+
+
+def test_repeat_op_same_op_params_may_vary():
+    found_varied = False
+    for seed in range(8):
+        space, trial, arch = _sample(BASE.format(mode="repeat_op"), seed=seed)
+        assert len(arch.layers) == 4
+        assert len({l.op for l in arch.layers}) == 1
+        if len({str(l.params) for l in arch.layers}) > 1:
+            found_varied = True
+    assert found_varied, "repeat_op should resample params per layer"
+
+
+def test_vary_all_can_vary_ops():
+    y = """
+input: [2, 64]
+output: 3
+sequence:
+  - block: "body"
+    op_candidates: ["conv1d", "maxpool"]
+    type_repeat:
+      type: "vary_all"
+      depth: 6
+default_op_params:
+  conv1d:
+    kernel_size: [3]
+    out_channels: [4]
+  maxpool:
+    window: [2]
+"""
+    ops_seen = set()
+    for seed in range(6):
+        _, _, arch = _sample(y, seed=seed)
+        assert len(arch.layers) == 6
+        ops_seen |= {l.op for l in arch.layers}
+    assert ops_seen == {"conv1d", "maxpool"}
+
+
+def test_repeat_block_copies_sampled_config():
+    y = """
+input: [2, 64]
+output: 3
+sequence:
+  - block: "a"
+    op_candidates: "conv1d"
+  - block: "b"
+    op_candidates: "conv1d"
+    type_repeat:
+      type: "repeat_block"
+      ref_block: "a"
+      depth: 3
+default_op_params:
+  conv1d:
+    kernel_size: [3, 5, 7]
+    out_channels: [4, 8, 16]
+"""
+    _, _, arch = _sample(y, seed=1)
+    assert len(arch.layers) == 4  # 1 (a) + 3 (repeats)
+    first = arch.layers[0]
+    for l in arch.layers[1:]:
+        assert l.op == first.op and l.params == first.params
+
+
+def test_depth_choices_sampled():
+    y = BASE.format(mode="repeat_op").replace("depth: 4", "depth: [2, 5]")
+    depths = set()
+    for seed in range(12):
+        _, _, arch = _sample(y, seed=seed)
+        depths.add(len(arch.layers))
+    assert depths <= {2, 5} and len(depths) == 2
+
+
+def test_adapter_inserted_between_formats():
+    y = """
+input: [2, 64]
+output: 3
+sequence:
+  - block: "c"
+    op_candidates: "conv1d"
+  - block: "h"
+    op_candidates: "linear"
+    linear:
+      width: [8]
+default_op_params:
+  conv1d:
+    kernel_size: [3]
+    out_channels: [4]
+"""
+    space, trial, arch = _sample(y)
+    model = ModelBuilder(space.input_shape, space.output_dim).build(arch)
+    names = [l.name for l in model.layers]
+    assert any(n.startswith("adapter/flatten") for n in names)
+    x = jnp.zeros((2, 64, 2))
+    params = model.init(jax.random.PRNGKey(0))
+    assert model.apply(params, x).shape == (2, 3)
+
+
+def test_unregistered_transition_raises():
+    with pytest.raises(KeyError):
+        get_transition("BF", "nonexistent")
+
+
+def test_reflection_masks_unsupported_ops():
+    y = """
+input: [2, 64]
+output: 3
+sequence:
+  - block: "body"
+    op_candidates: ["conv1d", "attention"]
+default_op_params:
+  conv1d:
+    kernel_size: [3]
+    out_channels: [4]
+  attention:
+    heads: [2]
+"""
+    space = parse_search_space(y)
+    study = Study(sampler=RandomSampler(seed=0))
+    for _ in range(6):
+        arch = sample_architecture(space, study.ask(), allowed_ops={"conv1d"})
+        assert all(l.op == "conv1d" for l in arch.layers)
+
+
+def test_shape_inference_through_strided_stack():
+    y = """
+input: [2, 64]
+output: 5
+sequence:
+  - block: "body"
+    op_candidates: "conv1d"
+    type_repeat:
+      type: "repeat_params"
+      depth: 3
+    conv1d:
+      kernel_size: [3]
+      out_channels: [6]
+      stride: [2]
+"""
+    space, trial, arch = _sample(y)
+    model = ModelBuilder(space.input_shape, space.output_dim).build(arch)
+    # 64 -> 32 -> 16 -> 8 under stride 2 SAME
+    conv_shapes = [l.out_shape for l in model.layers if l.name.startswith("conv1d")]
+    assert conv_shapes == [(32, 6), (16, 6), (8, 6)]
+    x = jnp.zeros((1, 64, 2))
+    params = model.init(jax.random.PRNGKey(0))
+    assert model.apply(params, x).shape == (1, 5)
