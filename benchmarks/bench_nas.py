@@ -21,15 +21,20 @@ from repro.core.builder import ModelBuilder
 from repro.core.space import parse_search_space
 from repro.core.translate import sample_architecture
 from repro.data.pipeline import SyntheticClassificationData
-from repro.evaluation import TrainedAccuracyEstimator
-from repro.hwgen.generator import HardwareManager, XLAGenerator
+from repro.evaluation import (
+    CompiledLatencyEstimator,
+    EvaluationCache,
+    TrainedAccuracyEstimator,
+)
 from repro.search import (
     GridSampler,
+    ParallelStudy,
     RandomSampler,
     RegularizedEvolutionSampler,
     Study,
     TPESampler,
 )
+from repro.hwgen.generator import HardwareManager, XLAGenerator
 
 SPACE_YAML = """
 input: [4, 256]
@@ -180,13 +185,149 @@ preprocessing:
          f"acc_base={acc_base:.3f};acc_joint={acc_joint:.3f}")
 
 
+PARALLEL_SPACE_YAML = """
+input: [2, 128]
+output: 4
+sequence:
+  - block: "features"
+    op_candidates: "conv1d"
+    type_repeat:
+      type: "repeat_op"
+      depth: [1, 2]
+    conv1d:
+      kernel_size: [3, 5]
+      out_channels: [8]
+  - block: "head"
+    op_candidates: "linear"
+    linear:
+      width: [16, 32]
+preprocessing:
+  normalize:
+    kind: ["zscore", "minmax"]
+"""
+
+
+PARALLEL_TRIALS, PARALLEL_SEED = 128, 5
+
+
+def run_parallel_config(name: str) -> dict:
+    """Run ONE serial/parallel configuration and return its measurements.
+
+    Each configuration must run in a fresh process: jax/XLA keeps an
+    in-process compilation cache, so any same-process rerun over the same
+    architectures is several times faster and would corrupt the
+    comparison (the later configuration always looks better).
+    """
+    space = parse_search_space(PARALLEL_SPACE_YAML)
+    builder = ModelBuilder(space.input_shape, space.output_dim)
+
+    def make_objective(estimate):
+        def objective(trial):
+            arch = sample_architecture(space, trial)
+            return estimate(builder.build(arch))
+        return objective
+
+    cache = EvaluationCache()
+    est = CompiledLatencyEstimator("host_cpu", batch=4, cache=cache, metric="modelled")
+
+    if name == "serial":
+        # baseline: serial loop, every candidate re-generated from scratch
+        # (what the paper's framework and aw_nas do per trial)
+        gen = XLAGenerator("host_cpu")
+
+        def raw_estimate(m):
+            import jax
+            import jax.numpy as jnp
+
+            l, c = m.input_shape[-1], m.input_shape[0]
+            params = m.init(jax.random.PRNGKey(0))
+            artifact = gen.generate(m.apply, (params, jnp.zeros((4, l, c), jnp.float32)))
+            return float(artifact.roofline.bound_s)
+
+        study, objective = Study(sampler=RandomSampler(seed=PARALLEL_SEED)), make_objective(raw_estimate)
+        opt_kw = {}
+    elif name == "serial_cached":
+        study, objective = Study(sampler=RandomSampler(seed=PARALLEL_SEED)), make_objective(est.estimate)
+        opt_kw = {}
+    elif name == "parallel4":
+        study = ParallelStudy(sampler=RandomSampler(seed=PARALLEL_SEED), n_workers=4)
+        objective = make_objective(est.estimate)
+        opt_kw = {"n_workers": 4}
+    else:
+        raise KeyError(name)
+
+    t0 = time.perf_counter()
+    study.optimize(objective, PARALLEL_TRIALS, **opt_kw)
+    seconds = time.perf_counter() - t0
+    best = study.best_trial
+    return {
+        "name": name,
+        "seconds": seconds,
+        "hit_rate": cache.stats.hit_rate,
+        "best_number": best.number,
+        "best_value": best.values[0],
+    }
+
+
+def bench_parallel_engine() -> None:
+    """Serial-recompile-everything vs ParallelStudy + shared EvaluationCache
+    on the compiled-latency objective (the framework's hottest path).
+
+    The space is deliberately compact so samplers revisit architectures —
+    the regime where the cache matters.  metric="modelled" makes the
+    objective value deterministic, so the serial and parallel runs at the
+    same seed must find the same best trial.  Every configuration runs in
+    its own subprocess (see run_parallel_config) so each pays its own cold
+    XLA compiles.
+    """
+    import json
+    import os
+    import subprocess
+    import sys
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = {**os.environ}
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(repo, "src"), repo] + env.get("PYTHONPATH", "").split(os.pathsep))
+
+    results = {}
+    for name in ("serial", "serial_cached", "parallel4"):
+        r = subprocess.run(
+            [sys.executable, os.path.abspath(__file__), "--parallel-config", name],
+            capture_output=True, text=True, env=env, timeout=1800, check=True)
+        results[name] = json.loads(r.stdout.strip().splitlines()[-1])
+
+    serial, cached, par = results["serial"], results["serial_cached"], results["parallel4"]
+    best_match = (serial["best_number"] == par["best_number"]
+                  and serial["best_value"] == par["best_value"]
+                  and cached["best_value"] == par["best_value"])
+    emit("parallel/serial", serial["seconds"] / PARALLEL_TRIALS,
+         f"best={serial['best_value']:.3e}")
+    emit("parallel/serial_cached", cached["seconds"] / PARALLEL_TRIALS,
+         f"hit_rate={cached['hit_rate']:.2f}")
+    emit("parallel/parallel4", par["seconds"] / PARALLEL_TRIALS,
+         f"speedup_vs_serial={serial['seconds'] / par['seconds']:.2f}x;"
+         f"speedup_vs_cached={cached['seconds'] / par['seconds']:.2f}x;"
+         f"hit_rate={par['hit_rate']:.2f};"
+         f"best_match={best_match}")
+
+
 def main() -> None:
     bench_samplers()
     bench_builder_throughput()
     bench_estimator_fidelity()
     bench_hil_pipeline()
     bench_preprocessing_joint()
+    bench_parallel_engine()
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+
+    if len(sys.argv) == 3 and sys.argv[1] == "--parallel-config":
+        # subprocess mode for bench_parallel_engine: emit one JSON line
+        import json
+
+        print(json.dumps(run_parallel_config(sys.argv[2])))
+    else:
+        main()

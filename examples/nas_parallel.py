@@ -1,0 +1,130 @@
+"""Parallel, cache-aware hardware-in-the-loop NAS.
+
+The serial trial loop is the framework's hottest path: every candidate
+pays an XLA generate + benchmark, and samplers revisit architectures
+constantly.  This example runs the same staged-criteria search as
+``nas_conv1d.py`` through the parallel evaluation engine:
+
+  * ``ParallelStudy`` overlaps objective evaluations on a thread pool
+    while keeping results reproducible (per-trial sampler RNG streams,
+    tell-in-trial-order);
+  * one shared ``EvaluationCache`` memoizes compiled artifacts and
+    estimator values by the candidate's full signature (layers AND
+    pre-processing), so the latency and memory estimators compile each
+    distinct candidate once — across all workers.
+
+    PYTHONPATH=src python examples/nas_parallel.py --trials 24 --workers 4
+"""
+import argparse
+import time
+
+from repro.core.builder import ModelBuilder
+from repro.core.space import parse_search_space
+from repro.core.translate import sample_architecture
+from repro.evaluation import (
+    CompiledLatencyEstimator,
+    CompiledMemoryEstimator,
+    CriteriaRunner,
+    EvaluationCache,
+    OptimizationCriteria,
+    ParamCountEstimator,
+)
+from repro.search import ParallelStudy, RandomSampler, Study
+
+SPACE_YAML = """
+input: [4, 256]
+output: 6
+sequence:
+  - block: "features"
+    op_candidates: "conv-block"
+    type_repeat:
+      type: "vary_all"
+      depth: [1, 2, 3]
+  - block: "head"
+    op_candidates: "linear"
+    linear:
+      width: [32, 64]
+default_op_params:
+  conv1d:
+    kernel_size: [3, 5]
+    out_channels: [8, 16]
+composites:
+  conv-block:
+    sequence:
+      - block: "conv"
+        op_candidates: "conv1d"
+      - block: "pool"
+        op_candidates: ["maxpool", "identity"]
+preprocessing:
+  normalize:
+    kind: ["zscore", "minmax"]
+"""
+
+
+def build_runner(cache: EvaluationCache) -> CriteriaRunner:
+    # hard memory budget -> latency objective; the shared cache means the
+    # two compiled estimators generate ONE artifact per candidate
+    return CriteriaRunner([
+        OptimizationCriteria(ParamCountEstimator(), kind="hard_constraint", limit=1e6),
+        OptimizationCriteria(CompiledMemoryEstimator("host_cpu", batch=8),
+                             kind="soft_constraint", limit=64e6, weight=0.1),
+        OptimizationCriteria(CompiledLatencyEstimator("host_cpu", batch=8, metric="modelled"),
+                             kind="objective", direction="minimize"),
+    ], cache=cache)
+
+
+def run(study, space, runner, trials, **opt_kw):
+    builder = ModelBuilder(space.input_shape, space.output_dim)
+
+    def objective(trial):
+        arch = sample_architecture(space, trial)
+        model = builder.build(arch)
+        trial.set_user_attr("signature", arch.signature())
+        return runner.evaluate(model, trial=trial)
+
+    t0 = time.perf_counter()
+    study.optimize(objective, trials, **opt_kw)
+    return time.perf_counter() - t0
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--trials", type=int, default=24)
+    p.add_argument("--workers", type=int, default=4)
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args()
+
+    space = parse_search_space(SPACE_YAML)
+    if args.trials < 1:
+        raise SystemExit("--trials must be >= 1")
+
+    # untimed warmup so the serial run doesn't absorb jax's one-time
+    # tracing/backend-init cost and skew the speedup
+    run(Study(sampler=RandomSampler(seed=999)), space,
+        build_runner(EvaluationCache()), 1)
+
+    serial_cache = EvaluationCache()
+    serial = Study(sampler=RandomSampler(seed=args.seed))
+    t_serial = run(serial, space, build_runner(serial_cache), args.trials)
+
+    par_cache = EvaluationCache()
+    par = ParallelStudy(sampler=RandomSampler(seed=args.seed), n_workers=args.workers)
+    t_par = run(par, space, build_runner(par_cache), args.trials, n_workers=args.workers)
+
+    print(f"\nserial:   {args.trials} trials in {t_serial:.1f}s "
+          f"({args.trials / t_serial:.2f} trials/s, cache {serial_cache.stats.as_dict()})")
+    print(f"parallel: {args.trials} trials in {t_par:.1f}s "
+          f"({args.trials / t_par:.2f} trials/s, cache {par_cache.stats.as_dict()})")
+    print(f"speedup: {t_serial / t_par:.2f}x with {args.workers} workers "
+          "(same-process runs share jax's warm caches — see "
+          "benchmarks/bench_nas.py parallel/ for isolated measurements)")
+
+    bs, bp = serial.best_trial, par.best_trial
+    print(f"\nserial best   #{bs.number}: score={bs.values[0]:.3e}")
+    print(f"parallel best #{bp.number}: score={bp.values[0]:.3e}")
+    assert bs.values == bp.values, "fixed seed + modelled latency must reproduce"
+    print("arch:", bp.user_attrs["signature"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Version-compatibility shims for the installed JAX.
+
+The codebase targets the newest JAX mesh API (explicit ``axis_types``),
+but the pinned toolchain in some environments predates
+``jax.sharding.AxisType`` (added after 0.4.37, where the attribute is a
+deprecation stub that raises).  Everything that builds a mesh goes
+through :func:`mesh_axis_kwargs` so the rest of the code never has to
+know which JAX it is running on.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+
+
+def has_axis_types() -> bool:
+    """True when ``jax.make_mesh`` accepts ``axis_types``."""
+    try:
+        return getattr(jax.sharding, "AxisType", None) is not None
+    except Exception:
+        return False
+
+
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """Normalized ``compiled.cost_analysis()`` across JAX versions.
+
+    Newer JAX returns a flat dict; 0.4.x returns a one-element list of
+    per-program dicts.  Always returns a (possibly empty) dict.
+    """
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca) if ca else {}
+
+
+def mesh_axis_kwargs(ndim: int) -> Dict[str, Any]:
+    """Extra ``jax.make_mesh`` kwargs for an ``ndim``-axis mesh.
+
+    Returns ``{"axis_types": (Auto,) * ndim}`` on JAX versions that
+    support explicit axis types, and ``{}`` otherwise (older JAX treats
+    every axis as Auto implicitly, so the semantics are unchanged).
+    """
+    if has_axis_types():
+        return {"axis_types": (jax.sharding.AxisType.Auto,) * ndim}
+    return {}

@@ -32,10 +32,22 @@ class ArchitectureIR:
     preprocessing: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
 
     def signature(self) -> str:
-        return "|".join(
+        """Canonical identity of the *full* candidate: pre-processing AND
+        layers.  The pre-processing stages compile into the same XLA
+        program as the model, so two candidates with identical layers but
+        different pre-processing are different programs — omitting the
+        stages here caused cache collisions in compiled-cost estimators."""
+        body = "|".join(
             f"{l.op}({','.join(f'{k}={v}' for k, v in sorted(l.params.items()))})"
             for l in self.layers
         )
+        if not self.preprocessing:
+            return body
+        pre = "|".join(
+            f"{s.get('stage')}({','.join(f'{k}={v}' for k, v in sorted(s.items()) if k != 'stage')})"
+            for s in self.preprocessing
+        )
+        return f"{pre}>>{body}"
 
 
 def _suggest_value(trial: Trial, name: str, spec: Any) -> Any:

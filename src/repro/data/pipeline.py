@@ -90,9 +90,14 @@ class SyntheticClassificationData:
     def __init__(self, n: int, length: int, channels: int, classes: int, seed: int = 0):
         rng = np.random.default_rng(seed)
         t = np.linspace(0, 1, length)[None, :, None]
-        freqs = rng.uniform(2, 30, (n, 1, channels))
-        phase = rng.uniform(0, 2 * np.pi, (n, 1, channels))
         self.y = rng.integers(0, classes, n)
+        # Two class signals so the label survives any searched pre-processing:
+        # amplitude (destroyed by per-sample normalization) AND a disjoint
+        # frequency band per class (normalization-invariant).
+        band = 28.0 / classes
+        lo = 2.0 + self.y[:, None, None] * band
+        freqs = lo + rng.uniform(0, 1, (n, 1, channels)) * band
+        phase = rng.uniform(0, 2 * np.pi, (n, 1, channels))
         amp = 1.0 + self.y[:, None, None] * 0.35
         self.x = (amp * np.sin(2 * np.pi * freqs * t + phase)
                   + 0.3 * rng.standard_normal((n, length, channels))).astype(np.float32)

@@ -4,6 +4,7 @@ from repro.evaluation.api import (
     OptimizationCriteria,
     weighted_sum,
 )
+from repro.evaluation.cache import CacheStats, EvaluationCache
 from repro.evaluation.estimators import (
     ActivationMemoryEstimator,
     CompiledLatencyEstimator,

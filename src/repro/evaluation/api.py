@@ -65,9 +65,18 @@ class CriteriaRunner:
         self,
         criteria: Sequence[OptimizationCriteria],
         aggregator: Callable[[Dict[str, float], List[OptimizationCriteria]], float] = weighted_sum,
+        cache=None,
     ):
         self.criteria = list(criteria)
         self.aggregator = aggregator
+        # One shared EvaluationCache for every compiled-cost estimator in
+        # the runner: candidates evaluated under several criteria (e.g.
+        # latency soft constraint + memory hard constraint) compile once.
+        self.cache = cache
+        if cache is not None:
+            for c in self.criteria:
+                if hasattr(c.estimator, "cache"):
+                    c.estimator.cache = cache
 
     def evaluate(self, candidate: Any, context: Optional[Dict] = None, trial=None) -> float:
         context = context or {}

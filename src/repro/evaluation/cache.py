@@ -1,0 +1,111 @@
+"""Shared, thread-safe evaluation cache for NAS candidate costs.
+
+Hardware-in-the-loop NAS is dominated by repeated compilation of
+identical architectures: samplers revisit points (grid wrap-around,
+evolution inheriting whole configurations, TPE exploitation), and every
+compiled-cost estimator used to re-generate its own artifact.  This
+module centralizes the memoization:
+
+  * keys are built from the candidate's *full* architecture signature
+    (layers AND pre-processing — see ``ArchitectureIR.signature``) plus
+    the estimator-specific context (target, batch), so distinct programs
+    never collide;
+  * one :class:`EvaluationCache` can be shared by several estimators —
+    ``CompiledLatencyEstimator`` and ``CompiledMemoryEstimator`` reuse
+    the same generated ``Artifact`` instead of compiling twice;
+  * lookups are single-flight: when several ``ParallelStudy`` workers
+    race on the same key, exactly one computes while the rest wait for
+    the result instead of duplicating an XLA compile.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Callable, Dict, Hashable, Optional, Tuple
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def as_dict(self) -> Dict[str, float]:
+        return {"hits": self.hits, "misses": self.misses, "hit_rate": self.hit_rate}
+
+
+class EvaluationCache:
+    """Thread-safe, single-flight memoization keyed by hashable tuples."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._entries: Dict[Hashable, Any] = {}
+        self._inflight: Dict[Hashable, threading.Event] = {}
+        self.stats = CacheStats()
+
+    # -- key construction ------------------------------------------------------
+
+    @staticmethod
+    def candidate_key(candidate: Any) -> Optional[str]:
+        """Identity of a candidate: the full architecture signature, or
+        None when the candidate has no arch.  None means "don't cache":
+        an object-id fallback would be unsound in a long-lived shared
+        cache (a freed candidate's address can be reused by a different
+        model, silently returning the wrong cost)."""
+        arch = getattr(candidate, "arch", None)
+        if arch is not None:
+            return arch.signature()
+        return None
+
+    # -- core ------------------------------------------------------------------
+
+    def get_or_compute(self, key: Hashable, compute: Callable[[], Any]) -> Any:
+        """Return the cached value for ``key``, computing it at most once
+        across concurrent callers (single-flight).  A key of None (or a
+        tuple containing None, as produced for uncacheable candidates)
+        bypasses the cache entirely."""
+        if key is None or (isinstance(key, tuple) and any(k is None for k in key)):
+            return compute()
+        while True:
+            with self._lock:
+                if key in self._entries:
+                    self.stats.hits += 1
+                    return self._entries[key]
+                event = self._inflight.get(key)
+                if event is None:
+                    event = threading.Event()
+                    self._inflight[key] = event
+                    self.stats.misses += 1
+                    break  # we own the computation
+            # another worker is computing this key: wait, then re-check
+            # (re-loop handles the owner failing with an exception)
+            event.wait()
+        try:
+            value = compute()
+        except BaseException:
+            with self._lock:
+                self._inflight.pop(key, None)
+            event.set()
+            raise
+        with self._lock:
+            self._entries[key] = value
+            self._inflight.pop(key, None)
+        event.set()
+        return value
+
+    def get(self, key: Hashable, default: Any = None) -> Any:
+        with self._lock:
+            return self._entries.get(key, default)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self.stats = CacheStats()

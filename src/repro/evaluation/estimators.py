@@ -23,6 +23,7 @@ import numpy as np
 
 from repro.core.builder import BuiltModel
 from repro.evaluation.api import Estimator
+from repro.evaluation.cache import EvaluationCache
 from repro.hwgen.generator import HardwareManager, XLAGenerator
 from repro.hwgen.targets import TargetSpec
 
@@ -52,45 +53,76 @@ class ActivationMemoryEstimator(Estimator):
         return float(peak * self.bytes_per_el)
 
 
-class CompiledLatencyEstimator(Estimator):
+class _CompiledEstimator(Estimator):
+    """Shared machinery for estimators that need a compiled artifact.
+
+    The generated artifact and the derived scalar are both memoized in an
+    :class:`EvaluationCache` keyed by the candidate's *full* architecture
+    signature (layers + pre-processing) plus the target and batch size.
+    Passing the same cache instance to several estimators makes them share
+    artifacts: latency and memory for one candidate cost one compile.
+    """
+
+    def __init__(self, target: TargetSpec | str, batch: int = 1,
+                 cache: Optional[EvaluationCache] = None):
+        self.generator = XLAGenerator(target)
+        self.batch = batch
+        self.cache = cache if cache is not None else EvaluationCache()
+
+    def _value_key(self, candidate: BuiltModel):
+        return (self.name, self.generator.target.name, self.batch,
+                EvaluationCache.candidate_key(candidate))
+
+    def _artifact(self, candidate: BuiltModel):
+        l, c = candidate.input_shape[-1], candidate.input_shape[0]
+        x = jnp.zeros((self.batch, l, c), jnp.float32)
+        params = candidate.init(jax.random.PRNGKey(0))
+        key = ("artifact", self.generator.target.name, self.batch,
+               EvaluationCache.candidate_key(candidate))
+        artifact = self.generator.generate_cached(self.cache, key, candidate.apply, (params, x))
+        return artifact, (params, x)
+
+
+class CompiledLatencyEstimator(_CompiledEstimator):
     """Hardware-in-the-loop latency via the generator pipeline (paper §VI
-    mode 2).  Results are cached by architecture signature."""
+    mode 2).  Results are cached by full architecture signature.
+
+    ``metric="measured"`` returns the HardwareManager result (wall-clock
+    on host targets); ``metric="modelled"`` returns the roofline bound of
+    the compiled program — deterministic across runs, which is what
+    reproducible serial-vs-parallel comparisons need.
+    """
 
     name = "latency_s"
 
-    def __init__(self, target: TargetSpec | str, batch: int = 1, manager: Optional[HardwareManager] = None):
-        self.generator = XLAGenerator(target)
+    def __init__(self, target: TargetSpec | str, batch: int = 1,
+                 manager: Optional[HardwareManager] = None,
+                 cache: Optional[EvaluationCache] = None,
+                 metric: str = "measured"):
+        super().__init__(target, batch=batch, cache=cache)
+        assert metric in ("measured", "modelled"), metric
         self.manager = manager or HardwareManager()
-        self.batch = batch
-        self._cache: Dict[str, float] = {}
+        self.metric = metric
 
     def estimate(self, candidate: BuiltModel, context=None) -> float:
-        sig = candidate.arch.signature() if candidate.arch else str(id(candidate))
-        if sig in self._cache:
-            return self._cache[sig]
-        l, c = candidate.input_shape[-1], candidate.input_shape[0]
-        x = jnp.zeros((self.batch, l, c), jnp.float32)
-        params = candidate.init(jax.random.PRNGKey(0))
-        artifact = self.generator.generate(candidate.apply, (params, x))
-        result = self.manager.benchmark(artifact, (params, x))
-        latency = result["latency_s"]
-        self._cache[sig] = latency
-        return latency
+        def compute() -> float:
+            artifact, concrete = self._artifact(candidate)
+            if self.metric == "modelled":
+                return float(artifact.roofline.bound_s)
+            return float(self.manager.benchmark(artifact, concrete)["latency_s"])
+
+        return self.cache.get_or_compute((self.metric,) + self._value_key(candidate), compute)
 
 
-class CompiledMemoryEstimator(Estimator):
+class CompiledMemoryEstimator(_CompiledEstimator):
     name = "peak_bytes"
 
-    def __init__(self, target: TargetSpec | str, batch: int = 1):
-        self.generator = XLAGenerator(target)
-        self.batch = batch
-
     def estimate(self, candidate: BuiltModel, context=None) -> float:
-        l, c = candidate.input_shape[-1], candidate.input_shape[0]
-        x = jnp.zeros((self.batch, l, c), jnp.float32)
-        params = candidate.init(jax.random.PRNGKey(0))
-        artifact = self.generator.generate(candidate.apply, (params, x))
-        return float(artifact.memory.get("peak_bytes_per_device", 0))
+        def compute() -> float:
+            artifact, _ = self._artifact(candidate)
+            return float(artifact.memory.get("peak_bytes_per_device", 0))
+
+        return self.cache.get_or_compute(self._value_key(candidate), compute)
 
 
 class TrainedAccuracyEstimator(Estimator):
@@ -103,10 +135,11 @@ class TrainedAccuracyEstimator(Estimator):
     name = "val_accuracy"
 
     def __init__(self, steps: int = 60, batch: int = 32, lr: float = 1e-3,
-                 report_every: int = 20):
+                 momentum: float = 0.9, report_every: int = 20):
         self.steps = steps
         self.batch = batch
         self.lr = lr
+        self.momentum = momentum
         self.report_every = report_every
 
     def estimate(self, candidate: BuiltModel, context=None) -> float:
@@ -124,10 +157,11 @@ class TrainedAccuracyEstimator(Estimator):
             return jnp.mean(logz - gold)
 
         @jax.jit
-        def step(p, xb, yb):
+        def step(p, m, xb, yb):
             loss, g = jax.value_and_grad(loss_fn)(p, xb, yb)
-            p = jax.tree_util.tree_map(lambda w, gw: w - self.lr * gw, p, g)
-            return p, loss
+            m = jax.tree_util.tree_map(lambda mw, gw: self.momentum * mw + gw, m, g)
+            p = jax.tree_util.tree_map(lambda w, mw: w - self.lr * mw, p, m)
+            return p, m, loss
 
         @jax.jit
         def accuracy(p, xb, yb):
@@ -136,9 +170,10 @@ class TrainedAccuracyEstimator(Estimator):
 
         rng = np.random.default_rng(0)
         n = x_train.shape[0]
+        momentum = jax.tree_util.tree_map(jnp.zeros_like, params)
         for i in range(self.steps):
             idx = rng.integers(0, n, self.batch)
-            params, _ = step(params, x_train[idx], y_train[idx])
+            params, momentum, _ = step(params, momentum, x_train[idx], y_train[idx])
             if trial is not None and (i + 1) % self.report_every == 0:
                 acc = float(accuracy(params, x_val, y_val))
                 trial.report(i + 1, -acc)  # studies minimize by default

@@ -18,12 +18,15 @@ has no TPU; on real hardware the same call times the executable).
 from __future__ import annotations
 
 import dataclasses
+import os
+import threading
 import time
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import numpy as np
 
+from repro.compat import cost_analysis_dict
 from repro.hwgen.hlo_analysis import parse_collectives, total_collective_bytes
 from repro.hwgen.roofline import RooflineReport, roofline_terms
 from repro.hwgen.targets import TargetSpec, get_target
@@ -51,6 +54,39 @@ class Artifact:
 
 class GeneratorError(RuntimeError):
     pass
+
+
+def _compile_limit() -> int:
+    """Max concurrent XLA compilations (admission control).
+
+    XLA's compiler uses its own internal thread pool, so letting every
+    ParallelStudy worker compile simultaneously oversubscribes the host
+    and makes *each* compile slower than running them back to back
+    (measured 0.68x aggregate on a 2-core container).  Serializing
+    compilation while workers overlap tracing, init and benchmarking
+    turns that thrash into a pipeline.  Override with
+    ``REPRO_COMPILE_CONCURRENCY``.
+    """
+    env = os.environ.get("REPRO_COMPILE_CONCURRENCY")
+    if env:
+        return max(1, int(env))
+    return max(1, (os.cpu_count() or 2) // 2)
+
+
+_gate_init_lock = threading.Lock()
+_gate: Optional[threading.BoundedSemaphore] = None
+
+
+def compile_gate() -> threading.BoundedSemaphore:
+    """The shared admission-control semaphore, created on first use (not
+    at import) so ``REPRO_COMPILE_CONCURRENCY`` set any time before the
+    first generate/benchmark takes effect."""
+    global _gate
+    if _gate is None:
+        with _gate_init_lock:
+            if _gate is None:
+                _gate = threading.BoundedSemaphore(_compile_limit())
+    return _gate
 
 
 class XLAGenerator:
@@ -83,6 +119,14 @@ class XLAGenerator:
                 f"target {self.target.name} needs {self.target.n_chips} devices: {e}"
             ) from e
 
+    def generate_cached(self, cache, key, fn: Callable, example_args: Tuple, **kw) -> Artifact:
+        """Memoized :meth:`generate` through a shared
+        :class:`~repro.evaluation.cache.EvaluationCache`: estimators that
+        need the same candidate's artifact (latency + memory) compile it
+        once; concurrent workers racing on one key compile it once too
+        (single-flight)."""
+        return cache.get_or_compute(key, lambda: self.generate(fn, example_args, **kw))
+
     def generate(
         self,
         fn: Callable,
@@ -92,35 +136,42 @@ class XLAGenerator:
         static_argnums=(),
     ) -> Artifact:
         mesh = self._mesh()
-        with mesh:
-            jitted = jax.jit(
-                fn,
-                in_shardings=in_shardings,
-                out_shardings=out_shardings,
-                static_argnums=static_argnums,
-            )
-            lowered = jitted.lower(*example_args)
-            compiled = lowered.compile()
-        try:
-            ca = compiled.cost_analysis()
+        # Admission control around the whole generate pipeline: tracing is
+        # GIL-bound Python, XLA compilation oversubscribes its internal
+        # pool, and the post-compile HLO analysis is GIL-bound text
+        # parsing — all of them contend when every ParallelStudy worker
+        # runs them at once (measured 0.68x aggregate for concurrent
+        # compiles on a 2-core container).  Gating them pipelines the
+        # workers; what overlaps is everything else: model build/init and
+        # cache hits (wall-clock measurement takes the same gate — see
+        # HardwareManager.benchmark).
+        with compile_gate():
+            with mesh:
+                jitted = jax.jit(
+                    fn,
+                    in_shardings=in_shardings,
+                    out_shardings=out_shardings,
+                    static_argnums=static_argnums,
+                )
+                lowered = jitted.lower(*example_args)
+                compiled = lowered.compile()
+            ca = cost_analysis_dict(compiled)
             flops = float(ca.get("flops", 0.0))
             bytes_accessed = float(ca.get("bytes accessed", 0.0))
-        except Exception:
-            flops, bytes_accessed = 0.0, 0.0
-        coll = total_collective_bytes(parse_collectives(compiled.as_text()))
-        try:
-            ma = compiled.memory_analysis()
-            memory = {
-                "argument_bytes": int(ma.argument_size_in_bytes),
-                "output_bytes": int(ma.output_size_in_bytes),
-                "temp_bytes": int(ma.temp_size_in_bytes),
-                "peak_bytes_per_device": int(
-                    ma.argument_size_in_bytes + ma.output_size_in_bytes
-                    + ma.temp_size_in_bytes - ma.alias_size_in_bytes
-                ),
-            }
-        except Exception:
-            memory = {}
+            coll = total_collective_bytes(parse_collectives(compiled.as_text()))
+            try:
+                ma = compiled.memory_analysis()
+                memory = {
+                    "argument_bytes": int(ma.argument_size_in_bytes),
+                    "output_bytes": int(ma.output_size_in_bytes),
+                    "temp_bytes": int(ma.temp_size_in_bytes),
+                    "peak_bytes_per_device": int(
+                        ma.argument_size_in_bytes + ma.output_size_in_bytes
+                        + ma.temp_size_in_bytes - ma.alias_size_in_bytes
+                    ),
+                }
+            except Exception:
+                memory = {}
         roofline = roofline_terms(
             hlo_flops=flops,
             hlo_bytes=bytes_accessed,
@@ -173,12 +224,18 @@ class HardwareManager:
                 for a in artifact.example_args
             )
         fn = artifact.compiled
-        for _ in range(self.warmup):
-            out = fn(*args)
-        jax.block_until_ready(out)
-        t0 = time.perf_counter()
-        for _ in range(self.iters):
-            out = fn(*args)
-        jax.block_until_ready(out)
-        dt = (time.perf_counter() - t0) / self.iters
+        # Wall-clock measurement must not overlap sibling workers' XLA
+        # compiles (or other measurements) — a timing taken during a
+        # neighbour's compile reports scheduler contention, not the
+        # architecture's latency, and the evaluation cache would freeze
+        # that corrupted number.  Take the same admission gate.
+        with compile_gate():
+            for _ in range(self.warmup):
+                out = fn(*args)
+            jax.block_until_ready(out)
+            t0 = time.perf_counter()
+            for _ in range(self.iters):
+                out = fn(*args)
+            jax.block_until_ready(out)
+            dt = (time.perf_counter() - t0) / self.iters
         return {"latency_s": dt, "measured": 1.0}

@@ -1,3 +1,4 @@
+from repro.search.parallel import ParallelStudy
 from repro.search.pruners import MedianPruner, SuccessiveHalvingPruner
 from repro.search.samplers import (
     GridSampler,
@@ -16,6 +17,7 @@ __all__ = [
     "HardConstraintViolated",
     "MedianPruner",
     "NSGA2Sampler",
+    "ParallelStudy",
     "RandomSampler",
     "RegularizedEvolutionSampler",
     "Study",

@@ -20,18 +20,33 @@ from repro.search.trial import Distribution, Trial, TrialState
 
 class BaseSampler:
     def __init__(self, seed: Optional[int] = None):
+        self._base_seed = seed if seed is not None else random.Random().getrandbits(31)
         self.rng = random.Random(seed)
+
+    def trial_rng(self, trial: Trial) -> random.Random:
+        """Concurrency-safe randomness hook: a per-trial RNG stream derived
+        from (sampler seed, trial number).  Each trial is evaluated by at
+        most one worker, so suggestions drawn from this stream are
+        deterministic regardless of how many workers run concurrently or
+        in which order their suggestions interleave."""
+        rng = getattr(trial, "_sampler_rng", None)
+        if rng is None:
+            rng = random.Random(f"{self._base_seed}/{trial.number}")
+            trial._sampler_rng = rng
+        return rng
 
     def sample(self, study, trial: Trial, name: str, dist: Distribution) -> Any:
         raise NotImplementedError
 
-    def on_trial_start(self, study, trial: Trial) -> None:  # hook
-        pass
+    def on_trial_start(self, study, trial: Trial) -> None:
+        """Hook run serially under the study lock at ask() time —
+        population-based samplers snapshot parents here so their shared
+        ``self.rng`` is never touched from worker threads."""
 
 
 class RandomSampler(BaseSampler):
     def sample(self, study, trial, name, dist):
-        return dist.random(self.rng)
+        return dist.random(self.trial_rng(trial))
 
 
 class GridSampler(BaseSampler):
@@ -43,21 +58,22 @@ class GridSampler(BaseSampler):
 
     def sample(self, study, trial, name, dist):
         if dist.kind == "float":
-            return dist.random(self.rng)
+            return dist.random(self.trial_rng(trial))
         grid = dist.grid()
         # position determined by trial number so the cartesian product is
         # swept in mixed-radix order across trials
-        seen_dists = study.distribution_registry
-        if name not in seen_dists:
-            seen_dists[name] = dist
-        names = sorted(seen_dists)
-        radix = 1
-        for n in names:
-            if n == name:
-                break
-            d = seen_dists[n]
-            if d.kind != "float":
-                radix *= max(1, len(d.grid()))
+        with study._lock:
+            seen_dists = study.distribution_registry
+            if name not in seen_dists:
+                seen_dists[name] = dist
+            names = sorted(seen_dists)
+            radix = 1
+            for n in names:
+                if n == name:
+                    break
+                d = seen_dists[n]
+                if d.kind != "float":
+                    radix *= max(1, len(d.grid()))
         return grid[(trial.number // radix) % len(grid)]
 
 
@@ -89,9 +105,10 @@ class TPESampler(BaseSampler):
         return done[:n_good], done[n_good:]
 
     def sample(self, study, trial, name, dist):
+        rng = self.trial_rng(trial)
         good, bad = self._split(study, name)
         if good is None:
-            return dist.random(self.rng)
+            return dist.random(rng)
         gvals = [t.params[name] for t in good]
         bvals = [t.params[name] for t in bad] or gvals
         if dist.kind == "categorical":
@@ -108,12 +125,10 @@ class TPESampler(BaseSampler):
             bw = max(1.06 * width * len(vals) ** -0.2, width / 50)
             return sum(math.exp(-0.5 * ((x - v) / bw) ** 2) for v in vals) / (len(vals) * bw)
 
-        cands = [dist.random(self.rng) for _ in range(self.n_candidates)]
+        cands = [dist.random(rng) for _ in range(self.n_candidates)]
         best = max(cands, key=lambda x: (kde(gvals, x) + 1e-12) / (kde(bvals, x) + 1e-12))
         if dist.kind == "int":
-            step = int(dist.step or 1)
-            best = int(round((best - dist.low) / step)) * step + int(dist.low)
-            best = min(max(best, int(dist.low)), int(dist.high))
+            best = dist.snap_int(best)
         return best
 
 
@@ -146,7 +161,7 @@ class RegularizedEvolutionSampler(BaseSampler):
     def sample(self, study, trial, name, dist):
         parent = self._parent_params.get(trial.number)
         if parent is None or name not in parent or name in self._mutated.get(trial.number, ()):
-            return dist.random(self.rng)
+            return dist.random(self.trial_rng(trial))
         return parent[name]
 
 
@@ -193,15 +208,28 @@ class NSGA2Sampler(BaseSampler):
             r += 1
         return ranks
 
+    def _crowding(self, pop):
+        """Crowding distance per trial: boundary points get inf, interior
+        points the normalized objective-space gap to their neighbours."""
+        dist = {t.number: 0.0 for t in pop}
+        for k in range(len(pop[0].values)):
+            srt = sorted(pop, key=lambda t: t.values[k])
+            span = max(srt[-1].values[k] - srt[0].values[k], 1e-12)
+            dist[srt[0].number] = dist[srt[-1].number] = float("inf")
+            for i in range(1, len(srt) - 1):
+                dist[srt[i].number] += (srt[i + 1].values[k] - srt[i - 1].values[k]) / span
+        return dist
+
     def on_trial_start(self, study, trial):
         done = [t for t in study.trials if t.state == TrialState.COMPLETE and t.values]
         pop = done[-self.population :]
         if len(pop) < 2:
             return
         ranks = self._rank(pop, study.directions)
+        crowd = self._crowding(pop)
         pick = lambda: min(
             (pop[self.rng.randrange(len(pop))] for _ in range(2)),
-            key=lambda t: ranks[t.number],
+            key=lambda t: (ranks[t.number], -crowd[t.number]),
         )
         p1, p2 = pick(), pick()
         child = {
@@ -210,8 +238,26 @@ class NSGA2Sampler(BaseSampler):
         }
         self._parent_params[trial.number] = child
 
+    def _mutate(self, rng, dist, value):
+        """Local (polynomial-style) mutation: perturb the inherited value
+        instead of resampling uniformly, so late mutations explore around
+        the current front rather than teleporting across the domain."""
+        if dist.kind == "float":
+            span = float(dist.high) - float(dist.low)
+            v = value + rng.gauss(0.0, 0.15 * span)
+            return min(max(v, float(dist.low)), float(dist.high))
+        if dist.kind == "int":
+            span = int(dist.high) - int(dist.low)
+            step = int(dist.step or 1)
+            v = value + rng.gauss(0.0, max(0.15 * span, step))
+            return dist.snap_int(v)
+        return dist.random(rng)
+
     def sample(self, study, trial, name, dist):
+        rng = self.trial_rng(trial)
         parent = self._parent_params.get(trial.number)
-        if parent is None or name not in parent or parent[name] is None or self.rng.random() < self.mutation_p:
-            return dist.random(self.rng)
+        if parent is None or name not in parent or parent[name] is None:
+            return dist.random(rng)
+        if rng.random() < self.mutation_p:
+            return self._mutate(rng, dist, parent[name])
         return parent[name]

@@ -11,7 +11,13 @@ from __future__ import annotations
 
 import json
 import os
+import threading
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+try:
+    import fcntl
+except ImportError:  # pragma: no cover — non-POSIX hosts
+    fcntl = None
 
 from repro.search.samplers import BaseSampler, RandomSampler, pareto_front
 from repro.search.trial import Distribution, Trial, TrialState
@@ -45,6 +51,7 @@ class Study:
         self.storage = storage
         self.trials: List[Trial] = []
         self.distribution_registry: Dict[str, Distribution] = {}
+        self._lock = threading.RLock()  # guards trials + registry + storage
         if storage and os.path.exists(storage):
             self._load(storage)
 
@@ -64,23 +71,40 @@ class Study:
                         self.trials[existing[t.number]] = t
                     else:
                         self.trials.append(t)
+        # Rebuild the distribution registry from the persisted trials so
+        # grid-position bookkeeping (GridSampler's mixed-radix sweep)
+        # continues where the crashed run stopped instead of restarting.
+        for t in self.trials:
+            for name, dist in t.distributions.items():
+                self.distribution_registry.setdefault(name, dist)
 
     def _persist(self, trial: Trial) -> None:
         if not self.storage:
             return
         os.makedirs(os.path.dirname(self.storage) or ".", exist_ok=True)
+        line = json.dumps({"kind": "trial", "trial": trial.to_dict()}) + "\n"
+        # Lock-safe append: serialized against sibling threads by the study
+        # lock (callers hold it) and against other processes sharing the
+        # storage file by an OS advisory lock around a single write().
         with open(self.storage, "a") as f:
-            f.write(json.dumps({"kind": "trial", "trial": trial.to_dict()}) + "\n")
-            f.flush()
-            os.fsync(f.fileno())
+            if fcntl is not None:
+                fcntl.flock(f.fileno(), fcntl.LOCK_EX)
+            try:
+                f.write(line)
+                f.flush()
+                os.fsync(f.fileno())
+            finally:
+                if fcntl is not None:
+                    fcntl.flock(f.fileno(), fcntl.LOCK_UN)
 
     # -- ask / tell -------------------------------------------------------------
 
     def ask(self) -> Trial:
-        trial = Trial(len(self.trials), self)
-        self.trials.append(trial)
-        self.sampler.on_trial_start(self, trial)
-        return trial
+        with self._lock:
+            trial = Trial(len(self.trials), self)
+            self.trials.append(trial)
+            self.sampler.on_trial_start(self, trial)
+            return trial
 
     def tell(self, trial: Trial, values, state: TrialState = TrialState.COMPLETE) -> None:
         if values is not None:
@@ -88,7 +112,8 @@ class Study:
                 values = (float(values),)
             trial.values = tuple(float(v) for v in values)
         trial.state = state
-        self._persist(trial)
+        with self._lock:
+            self._persist(trial)
 
     # -- optimize ---------------------------------------------------------------
 

@@ -38,13 +38,22 @@ class Distribution:
             return tuple(range(int(self.low), int(self.high) + 1, step))
         raise ValueError(f"cannot grid a continuous distribution")
 
+    def snap_int(self, value: float) -> int:
+        """Round an int suggestion onto the ``low + k*step`` grid, clamped
+        so the result never leaves [low, high]."""
+        step = int(self.step or 1)
+        lo, hi = int(self.low), int(self.high)
+        v = lo + step * int(round((value - lo) / step))
+        return max(lo, min(v, lo + step * ((hi - lo) // step)))
+
     def random(self, rng) -> Any:
         if self.kind == "categorical":
             return self.choices[rng.randrange(len(self.choices))]
         if self.kind == "int":
             if self.log:
                 lo, hi = math.log(self.low), math.log(self.high)
-                return int(round(math.exp(lo + (hi - lo) * rng.random())))
+                # snap keeps log-sampled values on the step grid
+                return self.snap_int(math.exp(lo + (hi - lo) * rng.random()))
             step = int(self.step or 1)
             n = (int(self.high) - int(self.low)) // step
             return int(self.low) + step * rng.randrange(n + 1)
@@ -54,6 +63,21 @@ class Distribution:
                 return math.exp(lo + (hi - lo) * rng.random())
             return self.low + (self.high - self.low) * rng.random()
         raise ValueError(self.kind)
+
+    # -- (de)serialization ----------------------------------------------------
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        if d.get("choices") is not None:
+            d["choices"] = list(d["choices"])
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "Distribution":
+        d = dict(d)
+        if d.get("choices") is not None:
+            d["choices"] = tuple(d["choices"])
+        return cls(**d)
 
 
 class Trial:
@@ -109,6 +133,7 @@ class Trial:
             "state": self.state.value,
             "values": list(self.values) if self.values is not None else None,
             "params": self.params,
+            "distributions": {k: d.to_dict() for k, d in self.distributions.items()},
             "intermediate": {str(k): v for k, v in self.intermediate.items()},
             "user_attrs": self.user_attrs,
         }
@@ -119,6 +144,9 @@ class Trial:
         t.state = TrialState(d["state"])
         t.values = tuple(d["values"]) if d.get("values") is not None else None
         t.params = dict(d.get("params", {}))
+        t.distributions = {
+            k: Distribution.from_dict(v) for k, v in d.get("distributions", {}).items()
+        }
         t.intermediate = {int(k): v for k, v in d.get("intermediate", {}).items()}
         t.user_attrs = dict(d.get("user_attrs", {}))
         return t

@@ -1,0 +1,295 @@
+"""Parallel evaluation engine + shared evaluation cache + resume fixes."""
+import os
+import threading
+import time
+
+import pytest
+
+from repro.core.builder import ModelBuilder
+from repro.core.space import parse_search_space
+from repro.core.translate import ArchitectureIR, LayerIR, sample_architecture
+from repro.evaluation import (
+    CompiledLatencyEstimator,
+    CompiledMemoryEstimator,
+    EvaluationCache,
+)
+from repro.search import GridSampler, ParallelStudy, RandomSampler, Study, TrialState
+
+SPACE = parse_search_space("""
+input: [2, 64]
+output: 3
+sequence:
+  - block: "c"
+    op_candidates: "conv1d"
+  - block: "h"
+    op_candidates: "linear"
+default_op_params:
+  conv1d:
+    kernel_size: [3]
+    out_channels: [4]
+""")
+
+
+# ---------------------------------------------------------------------------
+# signature regression: preprocessing is part of the cache identity
+# ---------------------------------------------------------------------------
+
+def test_signature_includes_preprocessing():
+    layers = [LayerIR(op="conv1d", params={"kernel_size": 3}, path="c")]
+    bare = ArchitectureIR(layers=list(layers))
+    zscore = ArchitectureIR(layers=list(layers),
+                            preprocessing=[{"stage": "normalize", "kind": "zscore"}])
+    minmax = ArchitectureIR(layers=list(layers),
+                            preprocessing=[{"stage": "normalize", "kind": "minmax"}])
+    sigs = {bare.signature(), zscore.signature(), minmax.signature()}
+    assert len(sigs) == 3  # all distinct — no cache collisions
+    assert bare.signature() in zscore.signature()  # layer part unchanged
+
+
+def test_compiled_estimators_distinguish_preprocessing():
+    """Two candidates differing only in pre-processing never share a
+    cached value (the pre-zscore/minmax programs are different)."""
+    builder = ModelBuilder(SPACE.input_shape, SPACE.output_dim)
+    study = Study(sampler=RandomSampler(seed=0))
+    arch = sample_architecture(SPACE, study.ask())
+    a = ModelBuilder(SPACE.input_shape, SPACE.output_dim).build(
+        ArchitectureIR(layers=arch.layers,
+                       preprocessing=[{"stage": "normalize", "kind": "zscore"}]))
+    b = builder.build(
+        ArchitectureIR(layers=arch.layers,
+                       preprocessing=[{"stage": "normalize", "kind": "minmax"}]))
+    cache = EvaluationCache()
+    est = CompiledLatencyEstimator("host_cpu", batch=1, cache=cache)
+    est.estimate(a)
+    est.estimate(b)
+    # two distinct candidates -> two artifacts + two values, zero hits
+    assert cache.stats.misses == 4 and cache.stats.hits == 0
+
+
+# ---------------------------------------------------------------------------
+# cache accounting + artifact sharing + single-flight
+# ---------------------------------------------------------------------------
+
+def test_cache_hit_miss_accounting_and_artifact_sharing():
+    builder = ModelBuilder(SPACE.input_shape, SPACE.output_dim)
+    study = Study(sampler=RandomSampler(seed=0))
+    m = builder.build(sample_architecture(SPACE, study.ask()))
+
+    cache = EvaluationCache()
+    lat = CompiledLatencyEstimator("host_cpu", batch=2, cache=cache)
+    mem = CompiledMemoryEstimator("host_cpu", batch=2, cache=cache)
+
+    v1 = lat.estimate(m)
+    assert cache.stats.misses == 2 and cache.stats.hits == 0  # artifact + value
+    mem.estimate(m)  # reuses the generated artifact: one hit, one new value
+    assert cache.stats.hits == 1 and cache.stats.misses == 3
+    assert lat.estimate(m) == v1  # pure value hit
+    assert cache.stats.hits == 2 and cache.stats.misses == 3
+    assert 0 < cache.stats.hit_rate < 1
+
+
+def test_cache_single_flight_under_contention():
+    cache = EvaluationCache()
+    calls = []
+
+    def compute():
+        calls.append(1)
+        time.sleep(0.05)
+        return 42
+
+    results = []
+    threads = [threading.Thread(target=lambda: results.append(
+        cache.get_or_compute("k", compute))) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert results == [42] * 8
+    assert len(calls) == 1  # exactly one compute despite 8 racing callers
+    assert cache.stats.misses == 1 and cache.stats.hits == 7
+
+
+def test_cache_failed_compute_retried():
+    cache = EvaluationCache()
+    state = {"n": 0}
+
+    def flaky():
+        state["n"] += 1
+        if state["n"] == 1:
+            raise RuntimeError("boom")
+        return "ok"
+
+    with pytest.raises(RuntimeError):
+        cache.get_or_compute("k", flaky)
+    assert cache.get_or_compute("k", flaky) == "ok"
+
+
+# ---------------------------------------------------------------------------
+# ParallelStudy: determinism, state handling, storage
+# ---------------------------------------------------------------------------
+
+def _quadratic(trial):
+    x = trial.suggest_float("x", -4.0, 4.0)
+    y = trial.suggest_float("y", -4.0, 4.0)
+    return (x - 1.0) ** 2 + (y + 0.5) ** 2
+
+
+def test_parallel_study_deterministic_across_worker_counts():
+    runs = {}
+    for w in (1, 4):
+        s = ParallelStudy(sampler=RandomSampler(seed=11), n_workers=w)
+        s.optimize(_quadratic, 20)
+        runs[w] = [(t.number, t.params["x"], t.params["y"], t.values[0]) for t in s.trials]
+    assert runs[1] == runs[4]  # identical params AND values per trial
+
+
+def test_parallel_study_matches_serial_study():
+    serial = Study(sampler=RandomSampler(seed=3))
+    serial.optimize(_quadratic, 16)
+    par = ParallelStudy(sampler=RandomSampler(seed=3), n_workers=4)
+    par.optimize(_quadratic, 16)
+    assert serial.best_trial.number == par.best_trial.number
+    assert serial.best_trial.values == par.best_trial.values
+
+
+def test_parallel_study_records_special_states(tmp_path):
+    from repro.search import TrialPruned
+    from repro.search.study import HardConstraintViolated
+
+    def obj(trial):
+        x = trial.suggest_int("i", 0, 100)
+        if trial.number % 3 == 0:
+            raise TrialPruned()
+        if trial.number % 3 == 1:
+            raise HardConstraintViolated("n_params", 10.0, 1.0)
+        return float(x)
+
+    path = os.path.join(tmp_path, "s.jsonl")
+    s = ParallelStudy(sampler=RandomSampler(seed=0), n_workers=4, storage=path)
+    s.optimize(obj, 12)
+    states = [t.state for t in s.trials]
+    assert states.count(TrialState.PRUNED) == 4
+    assert states.count(TrialState.INFEASIBLE) == 4
+    assert states.count(TrialState.COMPLETE) == 4
+    # storage got every trial exactly once, in trial order
+    s2 = Study(storage=path)
+    assert [t.number for t in s2.trials] == list(range(12))
+
+
+def test_parallel_study_drains_batch_on_uncaught_error(tmp_path):
+    """An uncaught objective exception must not strand sibling trials as
+    RUNNING — their finished evaluations are told (and persisted) first."""
+    path = os.path.join(tmp_path, "s.jsonl")
+
+    def obj(trial):
+        x = trial.suggest_int("i", 0, 100)
+        if trial.number == 3:
+            raise ValueError("boom")
+        return float(x)
+
+    s = ParallelStudy(sampler=RandomSampler(seed=0), n_workers=4, storage=path)
+    with pytest.raises(ValueError, match="boom"):
+        s.optimize(obj, 12)
+    assert all(t.state != TrialState.RUNNING for t in s.trials)
+    assert s.trials[3].state == TrialState.FAIL
+    completed = [t for t in s.trials if t.state == TrialState.COMPLETE]
+    assert completed  # siblings of the failing trial were preserved
+    s2 = Study(storage=path)
+    assert len(s2.trials) == len(s.trials)  # every told trial persisted
+
+
+def test_parallel_grid_matches_serial_grid():
+    """Grid sweep order is worker-count independent (first trial runs
+    serially, completing the distribution registry before fan-out) —
+    including when suggestion order differs from sorted name order."""
+    def obj(seen):
+        def _obj(trial):
+            b = trial.suggest_categorical("b", ["p", "q", "r"])
+            a = trial.suggest_int("a", 0, 1)
+            seen.append((a, b))
+            return 0.0
+        return _obj
+
+    serial_seen, par_seen = [], []
+    s = Study(sampler=GridSampler())
+    s.optimize(obj(serial_seen), 6)
+    p = ParallelStudy(sampler=GridSampler(), n_workers=4)
+    p.optimize(obj(par_seen), 6)
+    assert len(set(serial_seen)) == 6
+    assert sorted(par_seen) == sorted(serial_seen)
+
+
+def test_archless_candidate_not_cached():
+    """Candidates without an arch must bypass the cache — an object-id
+    key could alias a freed model's address."""
+    builder = ModelBuilder(SPACE.input_shape, SPACE.output_dim)
+    study = Study(sampler=RandomSampler(seed=0))
+    m = builder.build(sample_architecture(SPACE, study.ask()))
+    m.arch = None
+    cache = EvaluationCache()
+    est = CompiledLatencyEstimator("host_cpu", batch=1, cache=cache)
+    est.estimate(m)
+    assert len(cache) == 0 and cache.stats.hits == 0 and cache.stats.misses == 0
+
+
+# ---------------------------------------------------------------------------
+# resume: distribution registry + grid sweep continuation
+# ---------------------------------------------------------------------------
+
+def _grid_obj(seen):
+    def obj(trial):
+        # suggest in NON-sorted name order: pre-fix, the resumed study's
+        # empty registry gave "b" the wrong radix on the first trial
+        b = trial.suggest_categorical("b", ["p", "q", "r"])
+        a = trial.suggest_int("a", 0, 1)
+        seen.append((a, b))
+        return 0.0
+    return obj
+
+
+def test_grid_resume_continues_sweep(tmp_path):
+    path = os.path.join(tmp_path, "grid.jsonl")
+    seen = []
+    s1 = Study(sampler=GridSampler(), storage=path)
+    s1.optimize(_grid_obj(seen), 3)
+    assert len(set(seen)) == 3
+
+    s2 = Study(sampler=GridSampler(), storage=path)
+    assert s2.distribution_registry.keys() == {"a", "b"}
+    s2.optimize(_grid_obj(seen), 3)
+    # the resumed study covers the REMAINING half of the 2x3 product —
+    # no repeats, no holes
+    assert len(seen) == 6
+    assert len(set(seen)) == 6
+
+
+def test_distribution_survives_roundtrip(tmp_path):
+    path = os.path.join(tmp_path, "s.jsonl")
+    s1 = Study(sampler=RandomSampler(seed=0), storage=path)
+
+    def obj(trial):
+        trial.suggest_int("n", 4, 64, step=4, log=True)
+        trial.suggest_categorical("c", ["u", "v"])
+        return 0.0
+
+    s1.optimize(obj, 2)
+    s2 = Study(storage=path)
+    d = s2.distribution_registry["n"]
+    assert (d.kind, d.low, d.high, d.step, d.log) == ("int", 4, 64, 4, True)
+    assert s2.distribution_registry["c"].choices == ("u", "v")
+
+
+# ---------------------------------------------------------------------------
+# suggest_int(log=True) respects step
+# ---------------------------------------------------------------------------
+
+def test_int_log_suggestion_respects_step():
+    study = Study(sampler=RandomSampler(seed=0))
+    values = set()
+    for _ in range(60):
+        t = study.ask()
+        v = t.suggest_int("n", 4, 64, step=4, log=True)
+        values.add(v)
+        study.tell(t, 0.0)
+    assert all(4 <= v <= 64 and (v - 4) % 4 == 0 for v in values)
+    assert len(values) > 3  # still exploring the range, not collapsed

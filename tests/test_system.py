@@ -134,7 +134,8 @@ def test_dryrun_single_cell_small_mesh():
         "step, args, in_sh, out_sh, mesh, meta = build_cell('qwen3-1.7b', 'train_4k', False, cost_variant=True, n_units=2, overrides={'remat': False})\n"
         "lowered = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh).lower(*args)\n"
         "c = lowered.compile()\n"
-        "print('flops', c.cost_analysis().get('flops'))\n"
+        "from repro.compat import cost_analysis_dict\n"
+        "print('flops', cost_analysis_dict(c).get('flops'))\n"
     )
     r = _run([sys.executable, "-c", code], timeout=1200)
     assert r.returncode == 0, r.stderr[-3000:]
