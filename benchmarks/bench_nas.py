@@ -209,14 +209,97 @@ preprocessing:
 
 PARALLEL_TRIALS, PARALLEL_SEED = 128, 5
 
+# per-process lazy state for the picklable objective below: process-pool
+# workers (spawn) re-import this module and build their own copy, sharing
+# compiled values with the parent and each other through the disk cache
+_WORKER_STATE = {}
 
-def run_parallel_config(name: str) -> dict:
+
+class CompileBoundObjective:
+    """Picklable compile-bound objective usable on every executor backend.
+
+    Holds only strings; the heavy state (space, builder, estimator and
+    its cache) is built lazily per process.  Each trial records a
+    ``worker`` user-attr with the evaluating process's pid and its
+    cumulative cache/compile counters, so the parent can aggregate
+    "how many XLA compiles did this study really perform?" across
+    processes it cannot otherwise observe.
+    """
+
+    def __init__(self, cache_dir: str | None = None, tag: str = "default"):
+        self.cache_dir = cache_dir
+        self.tag = tag
+
+    def _state(self):
+        key = (self.cache_dir, self.tag)
+        state = _WORKER_STATE.get(key)
+        if state is None:
+            from repro.evaluation import EvaluationCache as _Cache
+
+            space = parse_search_space(PARALLEL_SPACE_YAML)
+            builder = ModelBuilder(space.input_shape, space.output_dim)
+            cache = _Cache(disk=self.cache_dir) if self.cache_dir else _Cache()
+            est = CompiledLatencyEstimator("host_cpu", batch=4, cache=cache,
+                                           metric="modelled")
+            state = _WORKER_STATE[key] = (space, builder, est)
+        return state
+
+    def __call__(self, trial):
+        import os as _os
+
+        from repro.hwgen.generator import generate_call_count
+
+        space, builder, est = self._state()
+        arch = sample_architecture(space, trial)
+        value = est.estimate(builder.build(arch))
+        trial.set_user_attr("worker", {
+            "pid": _os.getpid(),
+            "generates": generate_call_count(),
+            **est.cache.stats.as_dict(),
+        })
+        return value
+
+
+def _warm_worker():
+    """Per-worker-process warmup: pay the jax import + XLA backend init
+    before the measured region starts."""
+    import os as _os
+
+    import jax as _jax
+
+    _jax.devices()
+    return _os.getpid()
+
+
+def aggregate_worker_stats(study) -> dict:
+    """Sum each worker process's final cumulative counters (keyed by pid;
+    counters are monotone, so the elementwise max per pid is its total)."""
+    per_pid: dict = {}
+    for t in study.trials:
+        w = t.user_attrs.get("worker")
+        if not w:
+            continue
+        cur = per_pid.setdefault(w["pid"], dict(w))
+        for k in ("generates", "hits", "disk_hits", "misses"):
+            cur[k] = max(cur[k], w[k])
+    totals = {k: sum(c[k] for c in per_pid.values())
+              for k in ("generates", "hits", "disk_hits", "misses")}
+    lookups = totals["hits"] + totals["disk_hits"] + totals["misses"]
+    totals["hit_rate"] = (totals["hits"] + totals["disk_hits"]) / lookups if lookups else 0.0
+    totals["n_workers_seen"] = len(per_pid)
+    return totals
+
+
+def run_parallel_config(name: str, cache_dir: str | None = None) -> dict:
     """Run ONE serial/parallel configuration and return its measurements.
 
     Each configuration must run in a fresh process: jax/XLA keeps an
     in-process compilation cache, so any same-process rerun over the same
     architectures is several times faster and would corrupt the
-    comparison (the later configuration always looks better).
+    comparison (the later configuration always looks better).  The
+    ``disk_*`` configurations share compiled values through the
+    disk-persistent cache in ``cache_dir`` instead — pass a populated
+    directory to measure a warm restart.
     """
     space = parse_search_space(PARALLEL_SPACE_YAML)
     builder = ModelBuilder(space.input_shape, space.output_dim)
@@ -227,9 +310,12 @@ def run_parallel_config(name: str) -> dict:
             return estimate(builder.build(arch))
         return objective
 
-    cache = EvaluationCache()
-    est = CompiledLatencyEstimator("host_cpu", batch=4, cache=cache, metric="modelled")
+    def cached_estimator():
+        cache = EvaluationCache()
+        return cache, CompiledLatencyEstimator("host_cpu", batch=4, cache=cache,
+                                               metric="modelled")
 
+    stats_cache = None  # in-process cache whose stats we report, if any
     if name == "serial":
         # baseline: serial loop, every candidate re-generated from scratch
         # (what the paper's framework and aw_nas do per trial)
@@ -247,12 +333,35 @@ def run_parallel_config(name: str) -> dict:
         study, objective = Study(sampler=RandomSampler(seed=PARALLEL_SEED)), make_objective(raw_estimate)
         opt_kw = {}
     elif name == "serial_cached":
+        stats_cache, est = cached_estimator()
         study, objective = Study(sampler=RandomSampler(seed=PARALLEL_SEED)), make_objective(est.estimate)
         opt_kw = {}
     elif name == "parallel4":
+        stats_cache, est = cached_estimator()
         study = ParallelStudy(sampler=RandomSampler(seed=PARALLEL_SEED), n_workers=4)
         objective = make_objective(est.estimate)
         opt_kw = {"n_workers": 4}
+    elif name == "disk_serial":
+        study = Study(sampler=RandomSampler(seed=PARALLEL_SEED))
+        objective = CompileBoundObjective(cache_dir, tag=name)
+        opt_kw = {}
+    elif name in ("disk_thread2", "disk_process2"):
+        if name == "disk_thread2":
+            backend = "thread"
+        else:
+            # Pre-start + warm the worker processes (interpreter spawn,
+            # jax import, XLA backend init) before the measured region:
+            # the serial/thread configurations get those one-time costs
+            # untimed too, via the parent's module imports.
+            from repro.search import ProcessExecutor
+
+            backend = ProcessExecutor()
+            backend.start(2)
+            backend.warmup(_warm_worker)
+        study = ParallelStudy(sampler=RandomSampler(seed=PARALLEL_SEED),
+                              n_workers=2, backend=backend)
+        objective = CompileBoundObjective(cache_dir, tag=name)
+        opt_kw = {"n_workers": 2}
     else:
         raise KeyError(name)
 
@@ -260,13 +369,39 @@ def run_parallel_config(name: str) -> dict:
     study.optimize(objective, PARALLEL_TRIALS, **opt_kw)
     seconds = time.perf_counter() - t0
     best = study.best_trial
-    return {
+    out = {
         "name": name,
         "seconds": seconds,
-        "hit_rate": cache.stats.hit_rate,
+        "hit_rate": stats_cache.stats.hit_rate if stats_cache is not None else 0.0,
         "best_number": best.number,
         "best_value": best.values[0],
     }
+    if isinstance(objective, CompileBoundObjective):
+        # per-worker cumulative counters, aggregated across processes
+        # (includes the authoritative hit_rate for these configs)
+        out.update(aggregate_worker_stats(study))
+    return out
+
+
+def _run_config_subprocess(name: str, cache_dir: str | None = None) -> dict:
+    """Run one configuration in an isolated interpreter and parse its
+    JSON result line (see run_parallel_config for why isolation matters)."""
+    import json
+    import os
+    import subprocess
+    import sys
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = {**os.environ}
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(repo, "src"), repo] + env.get("PYTHONPATH", "").split(os.pathsep))
+    cmd = [sys.executable, os.path.abspath(__file__), "--parallel-config", name]
+    if cache_dir:
+        cmd.append(cache_dir)
+    r = subprocess.run(cmd, capture_output=True, text=True, env=env, timeout=1800)
+    if r.returncode != 0:
+        raise RuntimeError(f"config {name!r} failed:\n{r.stderr[-4000:]}")
+    return json.loads(r.stdout.strip().splitlines()[-1])
 
 
 def bench_parallel_engine() -> None:
@@ -280,23 +415,8 @@ def bench_parallel_engine() -> None:
     its own subprocess (see run_parallel_config) so each pays its own cold
     XLA compiles.
     """
-    import json
-    import os
-    import subprocess
-    import sys
-
-    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    env = {**os.environ}
-    env["PYTHONPATH"] = os.pathsep.join(
-        [os.path.join(repo, "src"), repo] + env.get("PYTHONPATH", "").split(os.pathsep))
-
-    results = {}
-    for name in ("serial", "serial_cached", "parallel4"):
-        r = subprocess.run(
-            [sys.executable, os.path.abspath(__file__), "--parallel-config", name],
-            capture_output=True, text=True, env=env, timeout=1800, check=True)
-        results[name] = json.loads(r.stdout.strip().splitlines()[-1])
-
+    results = {name: _run_config_subprocess(name)
+               for name in ("serial", "serial_cached", "parallel4")}
     serial, cached, par = results["serial"], results["serial_cached"], results["parallel4"]
     best_match = (serial["best_number"] == par["best_number"]
                   and serial["best_value"] == par["best_value"]
@@ -312,6 +432,50 @@ def bench_parallel_engine() -> None:
          f"best_match={best_match}")
 
 
+def bench_process_engine() -> None:
+    """Thread vs process executor at n_workers=2 on the compile-bound
+    objective, each against a cold disk store, then warm restarts over
+    the populated store on all three backends.
+
+    The process backend is the only configuration with real compile
+    concurrency (each worker process owns its own XLA compiler; the
+    in-process admission gate serializes sibling threads), so on a
+    compile-bound objective it must be at least as fast as the thread
+    backend.  A warm restart must perform ZERO XLA compiles (hit rate
+    1.0) and reproduce the identical best trial on every backend.
+    """
+    import shutil
+    import tempfile
+
+    trials = PARALLEL_TRIALS
+    dir_thread = tempfile.mkdtemp(prefix="bench-nas-cache-thread-")
+    dir_process = tempfile.mkdtemp(prefix="bench-nas-cache-process-")
+    try:
+        cold_thread = _run_config_subprocess("disk_thread2", dir_thread)
+        cold_process = _run_config_subprocess("disk_process2", dir_process)
+        best_match = (cold_process["best_number"] == cold_thread["best_number"]
+                      and cold_process["best_value"] == cold_thread["best_value"])
+        emit("process/thread2", cold_thread["seconds"] / trials,
+             f"compiles={cold_thread['generates']};hit_rate={cold_thread['hit_rate']:.2f}")
+        emit("process/process2", cold_process["seconds"] / trials,
+             f"speedup_vs_thread={cold_thread['seconds'] / cold_process['seconds']:.2f}x;"
+             f"compiles={cold_process['generates']};"
+             f"hit_rate={cold_process['hit_rate']:.2f};"
+             f"best_match={best_match}")
+
+        # warm restarts share the store the thread run populated
+        for short in ("serial", "thread2", "process2"):
+            r = _run_config_subprocess(f"disk_{short}", dir_thread)
+            best_match = (r["best_number"] == cold_thread["best_number"]
+                          and r["best_value"] == cold_thread["best_value"])
+            emit(f"warm-restart/{short}", r["seconds"] / trials,
+                 f"compiles={r['generates']};hit_rate={r['hit_rate']:.2f};"
+                 f"best_match={best_match}")
+    finally:
+        shutil.rmtree(dir_thread, ignore_errors=True)
+        shutil.rmtree(dir_process, ignore_errors=True)
+
+
 def main() -> None:
     bench_samplers()
     bench_builder_throughput()
@@ -319,15 +483,18 @@ def main() -> None:
     bench_hil_pipeline()
     bench_preprocessing_joint()
     bench_parallel_engine()
+    bench_process_engine()
 
 
 if __name__ == "__main__":
     import sys
 
-    if len(sys.argv) == 3 and sys.argv[1] == "--parallel-config":
-        # subprocess mode for bench_parallel_engine: emit one JSON line
+    if len(sys.argv) in (3, 4) and sys.argv[1] == "--parallel-config":
+        # subprocess mode for bench_parallel_engine / bench_process_engine:
+        # emit one JSON line (optional third arg: disk-cache store dir)
         import json
 
-        print(json.dumps(run_parallel_config(sys.argv[2])))
+        print(json.dumps(run_parallel_config(
+            sys.argv[2], sys.argv[3] if len(sys.argv) == 4 else None)))
     else:
         main()

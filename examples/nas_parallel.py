@@ -5,15 +5,21 @@ pays an XLA generate + benchmark, and samplers revisit architectures
 constantly.  This example runs the same staged-criteria search as
 ``nas_conv1d.py`` through the parallel evaluation engine:
 
-  * ``ParallelStudy`` overlaps objective evaluations on a thread pool
-    while keeping results reproducible (per-trial sampler RNG streams,
-    tell-in-trial-order);
+  * ``ParallelStudy`` overlaps objective evaluations on a pluggable
+    executor backend — ``thread`` (pool in-process) or ``process``
+    (worker processes, real compile concurrency) — while keeping results
+    reproducible (per-trial sampler RNG streams, tell-in-trial-order);
   * one shared ``EvaluationCache`` memoizes compiled artifacts and
     estimator values by the candidate's full signature (layers AND
     pre-processing), so the latency and memory estimators compile each
-    distinct candidate once — across all workers.
+    distinct candidate once — across all workers;
+  * with ``--cache-dir`` the scalar values also persist to a disk store,
+    so a re-run (or the process workers, which each build their own
+    in-memory cache) compiles each architecture at most once per host.
 
     PYTHONPATH=src python examples/nas_parallel.py --trials 24 --workers 4
+    PYTHONPATH=src python examples/nas_parallel.py --backend process \\
+        --trials 12 --workers 2 --cache-dir results/cache
 """
 import argparse
 import time
@@ -60,6 +66,22 @@ preprocessing:
     kind: ["zscore", "minmax"]
 """
 
+# compact variant for smoke runs (CI exercises the process backend on it)
+TINY_SPACE_YAML = """
+input: [2, 128]
+output: 4
+sequence:
+  - block: "features"
+    op_candidates: "conv1d"
+    conv1d:
+      kernel_size: [3, 5]
+      out_channels: [8]
+  - block: "head"
+    op_candidates: "linear"
+    linear:
+      width: [16, 32]
+"""
+
 
 def build_runner(cache: EvaluationCache) -> CriteriaRunner:
     # hard memory budget -> latency objective; the shared cache means the
@@ -73,15 +95,42 @@ def build_runner(cache: EvaluationCache) -> CriteriaRunner:
     ], cache=cache)
 
 
-def run(study, space, runner, trials, **opt_kw):
-    builder = ModelBuilder(space.input_shape, space.output_dim)
+# Per-process lazy state keyed by (space, cache_dir, tag): the objective
+# below holds only strings, so it pickles across the process boundary;
+# each process-pool worker re-imports this module and builds its own
+# space/builder/runner, sharing compiled values via the disk store.
+_STATE = {}
 
-    def objective(trial):
+
+class NASObjective:
+    def __init__(self, space_yaml: str, cache_dir=None, tag: str = "shared"):
+        self.space_yaml = space_yaml
+        self.cache_dir = cache_dir
+        self.tag = tag
+
+    def _setup(self):
+        key = (self.space_yaml, self.cache_dir, self.tag)
+        state = _STATE.get(key)
+        if state is None:
+            space = parse_search_space(self.space_yaml)
+            builder = ModelBuilder(space.input_shape, space.output_dim)
+            cache = EvaluationCache(disk=self.cache_dir) if self.cache_dir else EvaluationCache()
+            state = _STATE[key] = (space, builder, build_runner(cache), cache)
+        return state
+
+    @property
+    def cache(self) -> EvaluationCache:
+        return self._setup()[3]
+
+    def __call__(self, trial):
+        space, builder, runner, _ = self._setup()
         arch = sample_architecture(space, trial)
         model = builder.build(arch)
         trial.set_user_attr("signature", arch.signature())
         return runner.evaluate(model, trial=trial)
 
+
+def run(study, objective, trials, **opt_kw) -> float:
     t0 = time.perf_counter()
     study.optimize(objective, trials, **opt_kw)
     return time.perf_counter() - t0
@@ -92,36 +141,50 @@ def main():
     p.add_argument("--trials", type=int, default=24)
     p.add_argument("--workers", type=int, default=4)
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--backend", choices=("serial", "thread", "process"), default="thread",
+                   help="executor backend for the parallel study")
+    p.add_argument("--cache-dir", default=None,
+                   help="disk-persistent value store (e.g. results/cache); "
+                        "re-runs and process workers then skip every compile "
+                        "the host already paid for")
+    p.add_argument("--tiny", action="store_true",
+                   help="use the compact smoke-test search space")
     args = p.parse_args()
-
-    space = parse_search_space(SPACE_YAML)
     if args.trials < 1:
         raise SystemExit("--trials must be >= 1")
+    space_yaml = TINY_SPACE_YAML if args.tiny else SPACE_YAML
 
     # untimed warmup so the serial run doesn't absorb jax's one-time
     # tracing/backend-init cost and skew the speedup
-    run(Study(sampler=RandomSampler(seed=999)), space,
-        build_runner(EvaluationCache()), 1)
+    run(Study(sampler=RandomSampler(seed=999)),
+        NASObjective(space_yaml, tag="warmup"), 1)
 
-    serial_cache = EvaluationCache()
+    serial_obj = NASObjective(space_yaml, args.cache_dir, tag="serial")
     serial = Study(sampler=RandomSampler(seed=args.seed))
-    t_serial = run(serial, space, build_runner(serial_cache), args.trials)
+    t_serial = run(serial, serial_obj, args.trials)
 
-    par_cache = EvaluationCache()
-    par = ParallelStudy(sampler=RandomSampler(seed=args.seed), n_workers=args.workers)
-    t_par = run(par, space, build_runner(par_cache), args.trials, n_workers=args.workers)
+    par_obj = NASObjective(space_yaml, args.cache_dir, tag="parallel")
+    par = ParallelStudy(sampler=RandomSampler(seed=args.seed),
+                        n_workers=args.workers, backend=args.backend)
+    t_par = run(par, par_obj, args.trials, n_workers=args.workers)
 
     print(f"\nserial:   {args.trials} trials in {t_serial:.1f}s "
-          f"({args.trials / t_serial:.2f} trials/s, cache {serial_cache.stats.as_dict()})")
-    print(f"parallel: {args.trials} trials in {t_par:.1f}s "
-          f"({args.trials / t_par:.2f} trials/s, cache {par_cache.stats.as_dict()})")
-    print(f"speedup: {t_serial / t_par:.2f}x with {args.workers} workers "
-          "(same-process runs share jax's warm caches — see "
-          "benchmarks/bench_nas.py parallel/ for isolated measurements)")
+          f"({args.trials / t_serial:.2f} trials/s, cache {serial_obj.cache.stats.as_dict()})")
+    print(f"{args.backend}: {args.trials} trials in {t_par:.1f}s "
+          f"({args.trials / t_par:.2f} trials/s, parent cache {par_obj.cache.stats.as_dict()})")
+    caveat = (
+        "cache-assisted: both runs share the persistent store, so this measures "
+        "disk-cache reuse, not the executor backend"
+        if args.cache_dir else
+        "same-process runs share jax's warm caches — see benchmarks/bench_nas.py "
+        "parallel/ and process/ for isolated measurements"
+    )
+    print(f"speedup: {t_serial / t_par:.2f}x with {args.workers} {args.backend} workers "
+          f"({caveat})")
 
     bs, bp = serial.best_trial, par.best_trial
-    print(f"\nserial best   #{bs.number}: score={bs.values[0]:.3e}")
-    print(f"parallel best #{bp.number}: score={bp.values[0]:.3e}")
+    print(f"\nserial best        #{bs.number}: score={bs.values[0]:.3e}")
+    print(f"{args.backend} best #{bp.number}: score={bp.values[0]:.3e}")
     assert bs.values == bp.values, "fixed seed + modelled latency must reproduce"
     print("arch:", bp.user_attrs["signature"])
 

@@ -5,6 +5,7 @@ from repro.evaluation.api import (
     weighted_sum,
 )
 from repro.evaluation.cache import CacheStats, EvaluationCache
+from repro.evaluation.disk_cache import DiskEvaluationCache
 from repro.evaluation.estimators import (
     ActivationMemoryEstimator,
     CompiledLatencyEstimator,

@@ -1,0 +1,162 @@
+"""Disk-persistent tier for :class:`~repro.evaluation.cache.EvaluationCache`.
+
+XLA compilation dominates hardware-in-the-loop NAS, and the in-memory
+cache dies with the process: every resumed study — and every process
+worker — used to recompile architectures the host had already paid for.
+This module persists the *scalar* estimator values (latency, peak bytes,
+roofline bounds) so a restarted or process-parallel study compiles each
+architecture at most once per host:
+
+  * layout: one append-only JSONL file, ``entries.jsonl``, inside the
+    store directory (default ``results/cache/``), one record per value:
+    ``{"key": <canonical key>, "value": <scalar>}``;
+  * keys are the cache's own tuples — estimator name, target, batch,
+    full architecture signature (layers AND pre-processing) —
+    canonicalized to a JSON string, so a changed architecture, target,
+    or batch size can never alias an old entry.  **Invalidation** is
+    therefore structural: entries never go stale as long as signatures
+    capture the program; to force a rebuild (e.g. after a toolchain
+    upgrade that changes compile results), delete the store directory;
+  * compiled executables are not persistable — non-JSON values are
+    silently skipped and live only in the memory tier;
+  * concurrency: appends take an ``flock`` around a single ``write`` (the
+    same discipline as study JSONL storage), so sibling *processes*
+    sharing the store never tear records; readers only consume complete
+    lines and re-scan the tail on miss, so a value computed by one
+    worker is found by the others without recompiling.
+
+The store is warm-loaded at construction (study/estimator setup time)
+and refreshed incrementally on miss, so a restarted study starts with
+every previously compiled value already resident.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Any, Dict, Hashable, Optional, Tuple
+
+from repro.ioutils import locked_append
+
+DEFAULT_DIR = os.path.join("results", "cache")
+
+_JSON_SCALARS = (str, int, float, bool, type(None))
+
+
+def jsonable(value: Any) -> bool:
+    """True if ``value`` round-trips through JSON (tuples become lists)."""
+    if isinstance(value, _JSON_SCALARS):
+        return True
+    if isinstance(value, (list, tuple)):
+        return all(jsonable(v) for v in value)
+    if isinstance(value, dict):
+        return all(isinstance(k, str) and jsonable(v) for k, v in value.items())
+    return False
+
+
+def canonical_key(key: Hashable) -> Optional[str]:
+    """Stable string form of a cache key, or None when the key contains
+    non-JSON parts (those entries stay memory-only)."""
+    if not jsonable(key):
+        return None
+    return json.dumps(key, sort_keys=True, separators=(",", ":"))
+
+
+class DiskEvaluationCache:
+    """Append-only JSONL value store, safe across threads and processes."""
+
+    FILENAME = "entries.jsonl"
+
+    def __init__(self, path: str = DEFAULT_DIR):
+        self.path = str(path)
+        self._file = os.path.join(self.path, self.FILENAME)
+        self._lock = threading.Lock()
+        self._mem: Dict[str, Any] = {}
+        self._offset = 0  # byte offset of the next unread record
+        os.makedirs(self.path, exist_ok=True)
+        self.refresh()  # warm load at construction
+
+    # -- reading ---------------------------------------------------------------
+
+    def refresh(self) -> int:
+        """Consume records appended since the last read (by this process
+        or siblings sharing the store); returns how many were new."""
+        with self._lock:
+            return self._read_new()
+
+    def _read_new(self) -> int:
+        if not os.path.exists(self._file):
+            return 0
+        if os.path.getsize(self._file) < self._offset:
+            # the store was truncated (a sibling's clear()): our offset
+            # points past EOF and our memory view predates the wipe —
+            # drop both and re-read whatever the siblings rebuilt.  (If
+            # the file regrew past our offset before we noticed, stale
+            # entries can linger: cross-process invalidation is
+            # best-effort; delete the store directory between runs for a
+            # guaranteed rebuild.)
+            self._mem.clear()
+            self._offset = 0
+        with open(self._file, "rb") as f:
+            f.seek(self._offset)
+            data = f.read()
+        lines = data.split(b"\n")
+        # the final element is b"" after a complete record, or the torn
+        # tail of an append in progress — leave it for the next refresh
+        self._offset += len(data) - len(lines[-1])
+        n = 0
+        for raw in lines[:-1]:
+            if not raw.strip():
+                continue
+            try:
+                rec = json.loads(raw.decode("utf-8"))
+            except (UnicodeDecodeError, json.JSONDecodeError):
+                continue  # corrupt line: skip rather than poison the run
+            key = rec.get("key")
+            if isinstance(key, str) and "value" in rec:
+                self._mem[key] = rec["value"]
+                n += 1
+        return n
+
+    def lookup(self, key: Hashable) -> Tuple[bool, Any]:
+        """(found, value).  Re-scans the file tail first, so entries
+        appended by sibling processes are found before the caller pays a
+        compile — and a sibling's truncation is noticed before a stale
+        memory entry is served.  Callers (the memory tier) only reach
+        this once per key per process, so the extra stat+read is cheap."""
+        ck = canonical_key(key)
+        if ck is None:
+            return False, None
+        with self._lock:
+            self._read_new()
+            if ck in self._mem:
+                return True, self._mem[ck]
+        return False, None
+
+    # -- writing ---------------------------------------------------------------
+
+    def store(self, key: Hashable, value: Any) -> bool:
+        """Write-through one value; returns False (and skips the disk) for
+        non-canonical keys or non-JSON values (e.g. compiled artifacts)."""
+        ck = canonical_key(key)
+        if ck is None or not jsonable(value):
+            return False
+        with self._lock:
+            if ck in self._mem:  # already persisted (possibly by a sibling)
+                self._mem[ck] = value
+                return True
+            locked_append(self._file, json.dumps({"key": ck, "value": value}) + "\n")
+            self._mem[ck] = value
+        return True
+
+    def clear(self) -> None:
+        """Drop every persisted entry (truncates the store file)."""
+        with self._lock:
+            with open(self._file, "w"):
+                pass
+            self._mem.clear()
+            self._offset = 0
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._mem)

@@ -61,13 +61,20 @@ class _CompiledEstimator(Estimator):
     signature (layers + pre-processing) plus the target and batch size.
     Passing the same cache instance to several estimators makes them share
     artifacts: latency and memory for one candidate cost one compile.
+    ``cache`` may also be a store-directory path (or ``True`` for the
+    default ``results/cache/``), which wraps a fresh cache around the
+    disk-persistent tier so values survive restarts.
     """
 
     def __init__(self, target: TargetSpec | str, batch: int = 1,
-                 cache: Optional[EvaluationCache] = None):
+                 cache: Optional[EvaluationCache | str] = None):
         self.generator = XLAGenerator(target)
         self.batch = batch
-        self.cache = cache if cache is not None else EvaluationCache()
+        if cache is None:
+            cache = EvaluationCache()
+        elif not isinstance(cache, EvaluationCache):
+            cache = EvaluationCache(disk=cache)
+        self.cache = cache
 
     def _value_key(self, candidate: BuiltModel):
         return (self.name, self.generator.target.name, self.batch,
@@ -97,7 +104,7 @@ class CompiledLatencyEstimator(_CompiledEstimator):
 
     def __init__(self, target: TargetSpec | str, batch: int = 1,
                  manager: Optional[HardwareManager] = None,
-                 cache: Optional[EvaluationCache] = None,
+                 cache: Optional[EvaluationCache | str] = None,
                  metric: str = "measured"):
         super().__init__(target, batch=batch, cache=cache)
         assert metric in ("measured", "modelled"), metric

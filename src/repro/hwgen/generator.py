@@ -21,6 +21,7 @@ import dataclasses
 import os
 import threading
 import time
+import warnings
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -67,14 +68,36 @@ def _compile_limit() -> int:
     turns that thrash into a pipeline.  Override with
     ``REPRO_COMPILE_CONCURRENCY``.
     """
+    default = max(1, (os.cpu_count() or 2) // 2)
     env = os.environ.get("REPRO_COMPILE_CONCURRENCY")
-    if env:
+    if env is None or not env.strip():
+        return default
+    try:
         return max(1, int(env))
-    return max(1, (os.cpu_count() or 2) // 2)
+    except ValueError:
+        # A typo'd value must not explode at first compile deep inside a
+        # worker thread — fall back loudly to the default instead.
+        warnings.warn(
+            f"ignoring malformed REPRO_COMPILE_CONCURRENCY={env!r} "
+            f"(expected an integer); using the default of {default}",
+            RuntimeWarning,
+            stacklevel=2,
+        )
+        return default
 
 
 _gate_init_lock = threading.Lock()
 _gate: Optional[threading.BoundedSemaphore] = None
+
+_generate_count_lock = threading.Lock()
+_generate_count = 0
+
+
+def generate_call_count() -> int:
+    """Process-local count of :meth:`XLAGenerator.generate` invocations
+    (i.e. actual XLA compilations).  Warm-restart tests and benchmarks
+    assert this stays flat when every value comes from the disk cache."""
+    return _generate_count
 
 
 def compile_gate() -> threading.BoundedSemaphore:
@@ -135,6 +158,9 @@ class XLAGenerator:
         out_shardings=None,
         static_argnums=(),
     ) -> Artifact:
+        global _generate_count
+        with _generate_count_lock:
+            _generate_count += 1
         mesh = self._mesh()
         # Admission control around the whole generate pipeline: tracing is
         # GIL-bound Python, XLA compilation oversubscribes its internal

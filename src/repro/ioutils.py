@@ -1,0 +1,26 @@
+"""Small shared I/O helpers for crash-tolerant append-only JSONL stores."""
+from __future__ import annotations
+
+import os
+
+try:
+    import fcntl
+except ImportError:  # pragma: no cover — non-POSIX hosts
+    fcntl = None
+
+
+def locked_append(path: str, line: str) -> None:
+    """Append one record to ``path`` durably and atomically w.r.t. other
+    processes: an OS advisory lock around a single ``write`` + flush +
+    fsync, so concurrent appenders sharing the file never tear records.
+    Serialization against sibling *threads* is the caller's job."""
+    with open(path, "a") as f:
+        if fcntl is not None:
+            fcntl.flock(f.fileno(), fcntl.LOCK_EX)
+        try:
+            f.write(line)
+            f.flush()
+            os.fsync(f.fileno())
+        finally:
+            if fcntl is not None:
+                fcntl.flock(f.fileno(), fcntl.LOCK_UN)

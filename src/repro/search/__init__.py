@@ -1,3 +1,10 @@
+from repro.search.executors import (
+    BaseExecutor,
+    ProcessExecutor,
+    SerialExecutor,
+    ThreadExecutor,
+    make_executor,
+)
 from repro.search.parallel import ParallelStudy
 from repro.search.pruners import MedianPruner, SuccessiveHalvingPruner
 from repro.search.samplers import (
@@ -12,19 +19,24 @@ from repro.search.study import HardConstraintViolated, Study, TrialPruned
 from repro.search.trial import Distribution, Trial, TrialState
 
 __all__ = [
+    "BaseExecutor",
     "Distribution",
     "GridSampler",
     "HardConstraintViolated",
     "MedianPruner",
     "NSGA2Sampler",
     "ParallelStudy",
+    "ProcessExecutor",
     "RandomSampler",
     "RegularizedEvolutionSampler",
+    "SerialExecutor",
     "Study",
     "SuccessiveHalvingPruner",
     "TPESampler",
+    "ThreadExecutor",
     "Trial",
     "TrialPruned",
     "TrialState",
+    "make_executor",
     "pareto_front",
 ]

@@ -1,0 +1,239 @@
+"""Detached sampling: picklable per-trial plans for out-of-process trials.
+
+A ``ProcessExecutor`` worker cannot share the live :class:`Study` with
+the parent, so the sampler hands each trial a *detached plan* — a small
+picklable object holding everything the worker needs to reproduce the
+exact suggestions the in-process sampler would have made:
+
+  * the sampler's base seed, from which the per-trial RNG stream is
+    re-derived as ``random.Random(f"{base_seed}/{trial.number}")`` —
+    byte-identical to :meth:`BaseSampler.trial_rng`, so a fixed seed
+    yields the same parameters at any worker count and on any backend;
+  * sampler-specific snapshots taken at ask time under the study lock
+    (grid registry, TPE trial records, evolution/NSGA-II parents) —
+    exactly the state the threaded path would read during the batch,
+    because results are only told *between* batches.
+
+The pure sampling math (grid position, TPE split/pick) lives here and is
+called by both the live samplers and the detached plans, so the two
+paths cannot drift apart numerically.
+
+``DetachedTrial`` is the worker-side stand-in for :class:`Trial`: same
+suggest/report/user-attr surface, no study.  ``should_prune`` always
+returns ``False`` — pruners read study-wide history, which lives in the
+parent; use the thread backend when intermediate-value pruning matters.
+"""
+from __future__ import annotations
+
+import math
+import random
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.search.trial import Distribution
+
+
+# ---------------------------------------------------------------------------
+# shared sampling math (used by live samplers AND detached plans)
+# ---------------------------------------------------------------------------
+
+def grid_value(registry: Dict[str, Distribution], name: str,
+               dist: Distribution, number: int) -> Any:
+    """Mixed-radix grid position for trial ``number`` (GridSampler's core):
+    the cartesian product over the registry's non-float grids is swept in
+    sorted-name order.  Registers ``name`` in ``registry`` if unseen."""
+    grid = dist.grid()
+    registry.setdefault(name, dist)
+    radix = 1
+    for n in sorted(registry):
+        if n == name:
+            break
+        d = registry[n]
+        if d.kind != "float":
+            radix *= max(1, len(d.grid()))
+    return grid[(number // radix) % len(grid)]
+
+
+def tpe_split(records: Sequence[Tuple[Dict[str, Any], float]], name: str,
+              n_startup: int, gamma: float, sign: float):
+    """Split completed-trial ``(params, value)`` records into good/bad
+    value lists for ``name`` by the gamma-quantile of ``sign * value``.
+    Returns ``(None, None)`` below the startup threshold."""
+    done = [(p, v) for p, v in records if name in p]
+    if len(done) < n_startup:
+        return None, None
+    done.sort(key=lambda pv: sign * pv[1])
+    n_good = max(1, int(gamma * len(done)))
+    gvals = [p[name] for p, _ in done[:n_good]]
+    bvals = [p[name] for p, _ in done[n_good:]] or gvals
+    return gvals, bvals
+
+
+def tpe_pick(rng: random.Random, dist: Distribution, gvals: List[Any],
+             bvals: List[Any], n_candidates: int) -> Any:
+    """Pick the candidate maximizing l(x)/g(x) (kernel density for
+    continuous, smoothed counts for categorical)."""
+    if dist.kind == "categorical":
+        def score(c):
+            lg = (gvals.count(c) + 0.5) / (len(gvals) + 0.5 * len(dist.choices))
+            lb = (bvals.count(c) + 0.5) / (len(bvals) + 0.5 * len(dist.choices))
+            return lg / lb
+        return max(dist.choices, key=score)
+    # continuous / int: KDE with Scott bandwidth over candidates
+    lo, hi = float(dist.low), float(dist.high)
+    width = max(hi - lo, 1e-12)
+
+    def kde(vals, x):
+        bw = max(1.06 * width * len(vals) ** -0.2, width / 50)
+        return sum(math.exp(-0.5 * ((x - v) / bw) ** 2) for v in vals) / (len(vals) * bw)
+
+    cands = [dist.random(rng) for _ in range(n_candidates)]
+    best = max(cands, key=lambda x: (kde(gvals, x) + 1e-12) / (kde(bvals, x) + 1e-12))
+    if dist.kind == "int":
+        best = dist.snap_int(best)
+    return best
+
+
+# ---------------------------------------------------------------------------
+# detached plans
+# ---------------------------------------------------------------------------
+
+class DetachedSampler:
+    """Base plan: pure random from the per-trial RNG stream.  This is the
+    correct detachment for ``RandomSampler`` and the fallback any sampler
+    inherits; samplers that consult study state must override
+    :meth:`BaseSampler.detached` to snapshot what they need."""
+
+    def __init__(self, base_seed: int):
+        self.base_seed = base_seed
+
+    def rng(self, trial) -> random.Random:
+        r = getattr(trial, "_sampler_rng", None)
+        if r is None:
+            r = random.Random(f"{self.base_seed}/{trial.number}")
+            trial._sampler_rng = r
+        return r
+
+    def sample(self, trial, name: str, dist: Distribution) -> Any:
+        return dist.random(self.rng(trial))
+
+
+class DetachedGrid(DetachedSampler):
+    """Grid plan: a snapshot of the distribution registry at ask time.
+    Parameters registered only inside the worker extend the local copy
+    (best-effort sweep order, exactly like a resumed serial study)."""
+
+    def __init__(self, base_seed: int, registry: Dict[str, Distribution]):
+        super().__init__(base_seed)
+        self.registry = dict(registry)
+
+    def sample(self, trial, name, dist):
+        if dist.kind == "float":
+            return dist.random(self.rng(trial))
+        return grid_value(self.registry, name, dist, trial.number)
+
+
+class DetachedTPE(DetachedSampler):
+    """TPE plan: the completed-trial records visible at ask time (the
+    threaded path sees the same set — tells only happen between batches)."""
+
+    def __init__(self, base_seed: int, records, gamma: float,
+                 n_candidates: int, n_startup: int, sign: float):
+        super().__init__(base_seed)
+        self.records = records  # shared, read-only batch snapshot
+        self.gamma = gamma
+        self.n_candidates = n_candidates
+        self.n_startup = n_startup
+        self.sign = sign
+
+    def sample(self, trial, name, dist):
+        rng = self.rng(trial)
+        gvals, bvals = tpe_split(self.records, name, self.n_startup, self.gamma, self.sign)
+        if gvals is None:
+            return dist.random(rng)
+        return tpe_pick(rng, dist, gvals, bvals, self.n_candidates)
+
+
+class DetachedEvolution(DetachedSampler):
+    """Regularized-evolution plan: the parent configuration and mutation
+    set precomputed for this trial at ``on_trial_start``."""
+
+    def __init__(self, base_seed: int, parent: Optional[Dict[str, Any]], mutated):
+        super().__init__(base_seed)
+        self.parent = dict(parent) if parent is not None else None
+        self.mutated = set(mutated)
+
+    def sample(self, trial, name, dist):
+        if self.parent is None or name not in self.parent or name in self.mutated:
+            return dist.random(self.rng(trial))
+        return self.parent[name]
+
+
+class DetachedNSGA2(DetachedSampler):
+    """NSGA-II plan: the crossover child precomputed for this trial plus
+    the per-parameter mutation probability."""
+
+    def __init__(self, base_seed: int, parent: Optional[Dict[str, Any]], mutation_p: float):
+        super().__init__(base_seed)
+        self.parent = dict(parent) if parent is not None else None
+        self.mutation_p = mutation_p
+
+    def sample(self, trial, name, dist):
+        rng = self.rng(trial)
+        if self.parent is None or name not in self.parent or self.parent[name] is None:
+            return dist.random(rng)
+        if rng.random() < self.mutation_p:
+            return dist.perturb(rng, self.parent[name])
+        return self.parent[name]
+
+
+# ---------------------------------------------------------------------------
+# worker-side trial
+# ---------------------------------------------------------------------------
+
+class DetachedTrial:
+    """Worker-side stand-in for :class:`Trial`: the same suggestion
+    surface, backed by a :class:`DetachedSampler` plan instead of a live
+    study.  Everything it accumulates (params, distributions, attrs,
+    intermediate reports) is merged back into the real trial by the
+    executor when the worker returns."""
+
+    def __init__(self, number: int, sampler: DetachedSampler):
+        self.number = number
+        self.params: Dict[str, Any] = {}
+        self.distributions: Dict[str, Distribution] = {}
+        self.intermediate: Dict[int, float] = {}
+        self.user_attrs: Dict[str, Any] = {}
+        self.system_attrs: Dict[str, Any] = {}
+        self._sampler = sampler
+
+    def _suggest(self, name: str, dist: Distribution) -> Any:
+        if name in self.params:
+            return self.params[name]
+        value = self._sampler.sample(self, name, dist)
+        self.params[name] = value
+        self.distributions[name] = dist
+        return value
+
+    def suggest_categorical(self, name: str, choices: Sequence[Any]) -> Any:
+        return self._suggest(name, Distribution("categorical", choices=tuple(choices)))
+
+    def suggest_int(self, name: str, low: int, high: int, step: int = 1, log: bool = False) -> int:
+        return int(self._suggest(name, Distribution("int", low=low, high=high, step=step, log=log)))
+
+    def suggest_float(self, name: str, low: float, high: float, log: bool = False) -> float:
+        return float(self._suggest(name, Distribution("float", low=low, high=high, log=log)))
+
+    def report(self, step: int, value: float) -> None:
+        self.intermediate[int(step)] = float(value)
+
+    def should_prune(self) -> bool:
+        # Pruners consult study-wide trial history, which lives in the
+        # parent process; a detached trial never prunes.
+        return False
+
+    def set_user_attr(self, key: str, value: Any) -> None:
+        self.user_attrs[key] = value
+
+    @property
+    def value(self) -> Optional[float]:
+        return None

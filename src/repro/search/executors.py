@@ -1,0 +1,252 @@
+"""Pluggable evaluation executors for :class:`ParallelStudy`.
+
+The study owns *what* runs (batch-ask, tell-in-trial-order, batch
+draining on errors); an executor owns *where* a batch of objective calls
+runs:
+
+  * :class:`SerialExecutor`  — in the calling thread, one at a time.
+    The reference backend: zero concurrency, zero surprises.
+  * :class:`ThreadExecutor`  — a thread pool.  Wins when the objective
+    blocks (wall-clock benchmarking, I/O, remote devices) but is bound
+    by the GIL + compile admission gate for compile-heavy objectives.
+  * :class:`ProcessExecutor` — a ``ProcessPoolExecutor``.  Real compile
+    concurrency: each worker process owns its own XLA compiler and GIL.
+    Objectives must be picklable (module-level functions or callables —
+    closures won't cross the process boundary), and each trial ships as
+    a picklable payload: the trial number plus the sampler's *detached
+    plan* (see :mod:`repro.search.detached`).  Per-trial RNG streams are
+    re-derived in the worker from the same ``(seed, number)`` key, so a
+    fixed seed yields identical trials on every backend at any worker
+    count.  Everything the worker-side trial accumulates — params,
+    distributions, user/system attrs, intermediate reports — is merged
+    back into the parent's trial before ``tell``.
+
+All three return, for each trial in the batch, either a
+``(values, state)`` outcome or the ``BaseException`` the objective
+escaped with; they never raise from ``run_batch`` itself, so the study's
+batch-draining error path sees every sibling result.
+"""
+from __future__ import annotations
+
+import dataclasses
+import multiprocessing
+import pickle
+import traceback
+from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
+from typing import Any, Callable, Dict, List, Optional, Tuple, Union
+
+from repro.search.detached import DetachedSampler, DetachedTrial
+from repro.search.study import evaluate_trial
+from repro.search.trial import Distribution, Trial, TrialState
+
+Outcome = Union[Tuple[Optional[object], TrialState], BaseException]
+
+
+# ---------------------------------------------------------------------------
+# process-backend payloads
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class WorkerResult:
+    """What one out-of-process trial evaluation sends back to the parent."""
+
+    number: int
+    values: Optional[object]
+    state: TrialState
+    params: Dict[str, Any]
+    distributions: Dict[str, Distribution]
+    user_attrs: Dict[str, Any]
+    system_attrs: Dict[str, Any]
+    intermediate: Dict[int, float]
+    error: Optional[BaseException] = None
+
+
+def _portable_exception(e: BaseException) -> BaseException:
+    """Return ``e`` if it survives a pickle round-trip, else a
+    ``RuntimeError`` carrying its repr + traceback (the parent re-raises
+    whichever comes back)."""
+    try:
+        pickle.loads(pickle.dumps(e))
+        return e
+    except Exception:
+        return RuntimeError(
+            f"unpicklable {type(e).__name__} in process worker: {e}\n"
+            + "".join(traceback.format_exception(type(e), e, e.__traceback__))
+        )
+
+
+def run_detached_trial(objective: Callable, number: int, plan: DetachedSampler,
+                       catch: Tuple) -> WorkerResult:
+    """Worker entry point: evaluate the objective on a detached trial.
+    Uncaught exceptions are *returned* (not raised) so the sampled params
+    and attrs collected before the failure still reach the parent."""
+    trial = DetachedTrial(number, plan)
+    error: Optional[BaseException] = None
+    try:
+        values, state = evaluate_trial(objective, trial, catch)
+    except BaseException as e:  # uncaught objective error
+        trial.set_user_attr("error", repr(e))
+        values, state = None, TrialState.FAIL
+        error = _portable_exception(e)
+    return WorkerResult(
+        number=number, values=values, state=state, params=trial.params,
+        distributions=trial.distributions, user_attrs=trial.user_attrs,
+        system_attrs=trial.system_attrs, intermediate=trial.intermediate,
+        error=error,
+    )
+
+
+# ---------------------------------------------------------------------------
+# executors
+# ---------------------------------------------------------------------------
+
+class BaseExecutor:
+    """Lifecycle: ``start(n_workers)``, any number of ``run_batch`` calls,
+    then ``shutdown()`` (optimize does all three; an executor instance is
+    restartable).  ``start`` on an already-started executor keeps the
+    existing pool, so a caller can pre-start (and :meth:`warmup`) an
+    executor before handing it to ``optimize``."""
+
+    name = "base"
+
+    def start(self, n_workers: int) -> None:
+        pass
+
+    def shutdown(self) -> None:
+        pass
+
+    def warmup(self, fn: Callable[[], Any]) -> None:
+        """Best-effort: run ``fn()`` once per worker so one-time
+        per-process costs (interpreter spawn, heavyweight imports, XLA
+        backend init) land before the first measured batch.  In-process
+        executors share the parent's modules, so the default is a no-op."""
+
+    def run_batch(self, study, objective: Callable, trials: List[Trial],
+                  catch: Tuple) -> List[Outcome]:
+        raise NotImplementedError
+
+
+class SerialExecutor(BaseExecutor):
+    name = "serial"
+
+    def run_batch(self, study, objective, trials, catch):
+        out: List[Outcome] = []
+        for trial in trials:
+            try:
+                out.append(evaluate_trial(objective, trial, catch))
+            except BaseException as e:
+                out.append(e)
+        return out
+
+
+class ThreadExecutor(BaseExecutor):
+    name = "thread"
+
+    def __init__(self):
+        self._pool: Optional[ThreadPoolExecutor] = None
+
+    def start(self, n_workers):
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(max_workers=n_workers)
+
+    def shutdown(self):
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+
+    def run_batch(self, study, objective, trials, catch):
+        futures = [self._pool.submit(evaluate_trial, objective, t, catch) for t in trials]
+        out: List[Outcome] = []
+        for fut in futures:
+            try:
+                out.append(fut.result())
+            except BaseException as e:
+                out.append(e)
+        return out
+
+
+class ProcessExecutor(BaseExecutor):
+    """Evaluate trials in worker processes (default start method: spawn —
+    forking a process that already initialized XLA's thread pools is not
+    safe).  Worker-side pruning is disabled; see DetachedTrial."""
+
+    name = "process"
+
+    def __init__(self, mp_context: str = "spawn"):
+        self.mp_context = mp_context
+        self._pool: Optional[ProcessPoolExecutor] = None
+        self._n_workers = 0
+
+    def start(self, n_workers):
+        if self._pool is not None:
+            return
+        ctx = multiprocessing.get_context(self.mp_context)
+        self._pool = ProcessPoolExecutor(max_workers=n_workers, mp_context=ctx)
+        self._n_workers = n_workers
+
+    def shutdown(self):
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+
+    def warmup(self, fn):
+        """Run ``fn`` once per worker.  ``fn`` should be slow enough
+        (importing jax qualifies) that every worker process spawns and
+        takes one task; a racy double-grab only means one worker warms
+        lazily at its first real trial."""
+        if self._pool is None:
+            return
+        for fut in [self._pool.submit(fn) for _ in range(self._n_workers)]:
+            fut.result()
+
+    def _merge(self, study, trial: Trial, res: WorkerResult) -> None:
+        trial.params.update(res.params)
+        trial.distributions.update(res.distributions)
+        trial.user_attrs.update(res.user_attrs)
+        trial.system_attrs.update(res.system_attrs)
+        trial.intermediate.update(res.intermediate)
+        with study._lock:
+            for name, dist in res.distributions.items():
+                study.distribution_registry.setdefault(name, dist)
+
+    def run_batch(self, study, objective, trials, catch):
+        with study._lock:
+            plans = [study.sampler.detached(study, t) for t in trials]
+        futures = [
+            self._pool.submit(run_detached_trial, objective, t.number, plan, catch)
+            for t, plan in zip(trials, plans)
+        ]
+        out: List[Outcome] = []
+        for fut, trial in zip(futures, trials):
+            try:
+                res = fut.result()
+            except BaseException as e:  # payload/result failed to pickle, worker died
+                trial.set_user_attr("error", repr(e))
+                out.append(e)
+                continue
+            self._merge(study, trial, res)
+            if res.error is not None:
+                out.append(res.error)
+            else:
+                out.append((res.values, res.state))
+        return out
+
+
+_BACKENDS = {
+    "serial": SerialExecutor,
+    "thread": ThreadExecutor,
+    "process": ProcessExecutor,
+}
+
+
+def make_executor(backend: Union[str, BaseExecutor]) -> BaseExecutor:
+    """Resolve a backend name ("serial" | "thread" | "process") or pass an
+    executor instance through."""
+    if isinstance(backend, BaseExecutor):
+        return backend
+    try:
+        return _BACKENDS[backend]()
+    except KeyError:
+        raise ValueError(
+            f"unknown executor backend {backend!r}; expected one of {sorted(_BACKENDS)}"
+        ) from None

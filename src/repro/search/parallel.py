@@ -1,24 +1,36 @@
 """ParallelStudy: batch-synchronous concurrent trial evaluation.
 
 Hardware-in-the-loop NAS is embarrassingly parallel across candidates —
-each objective call is dominated by XLA compilation and benchmark I/O,
-both of which release the GIL — yet the base :class:`Study` evaluates
-strictly serially.  ``ParallelStudy`` keeps the exact ask/tell surface
-and storage format but overlaps objective evaluation with a thread pool:
+each objective call is dominated by XLA compilation and benchmark I/O —
+yet the base :class:`Study` evaluates strictly serially.
+``ParallelStudy`` keeps the exact ask/tell surface and storage format
+but overlaps objective evaluation on a pluggable executor backend
+(:mod:`repro.search.executors`):
 
   * trials are **batch-asked** serially under the study lock (sampler
     ``on_trial_start`` hooks — population snapshots, grid bookkeeping —
     never run concurrently);
-  * objectives run concurrently on the pool, drawing suggestions from
-    per-trial RNG streams (``BaseSampler.trial_rng``), so the sampled
-    parameters for trial *n* are identical no matter how many workers
-    run or how their suggestions interleave;
+  * objectives run on the executor — in-thread (``serial``), on a thread
+    pool (``thread``), or in worker processes (``process``) — drawing
+    suggestions from per-trial RNG streams (``BaseSampler.trial_rng``,
+    re-derived inside process workers from the same ``(seed, number)``
+    key), so the sampled parameters for trial *n* are identical no
+    matter which backend runs it, how many workers run, or how their
+    suggestions interleave;
   * results are **told in trial order** once the batch completes, so the
     JSONL storage and the pruner/population state evolve exactly as a
     serial run with the same batch boundaries would.
 
+Backend choice: ``thread`` (default) when the objective blocks without
+holding the GIL (wall-clock benchmarking, remote devices) or when you
+need intermediate-value pruning; ``process`` when the objective is
+compile-bound — each worker process owns its own XLA compiler, which is
+the only way to get real compile concurrency (the in-process admission
+gate serializes sibling threads).  ``process`` requires a picklable
+objective and disables worker-side pruning.
+
 Determinism: with a stateless sampler (Random/Grid) and a deterministic
-objective, ``n_workers=1`` and ``n_workers=k`` produce identical trial
+objective, every backend and every ``n_workers`` produce identical trial
 parameters and identical best values.  The first trial runs
 synchronously so GridSampler's distribution registry is complete before
 workers fan out (spaces whose parameter set varies per trial — deeply
@@ -27,41 +39,33 @@ case Grid's sweep order is best-effort, exactly as in a resumed serial
 study).  Population-based samplers (TPE/evolution/NSGA-II) see
 population snapshots at batch granularity, so their trajectory depends
 on ``n_workers`` (like any batched ask/tell optimizer) but is
-reproducible for a fixed ``n_workers`` and seed.
+reproducible for a fixed ``n_workers`` and seed — and identical between
+the thread and process backends, whose snapshots are taken at the same
+batch boundaries.
 """
 from __future__ import annotations
 
-from concurrent.futures import ThreadPoolExecutor
-from typing import Callable, Optional, Tuple
+from typing import Callable, Optional, Tuple, Union
 
-from repro.search.study import HardConstraintViolated, Study, TrialPruned
+from repro.search.executors import BaseExecutor, evaluate_trial, make_executor
+from repro.search.study import Study
 from repro.search.trial import Trial, TrialState
 
 
 class ParallelStudy(Study):
     """A Study whose ``optimize`` evaluates objectives concurrently."""
 
-    def __init__(self, *args, n_workers: int = 4, **kwargs):
+    def __init__(self, *args, n_workers: int = 4,
+                 backend: Union[str, BaseExecutor] = "thread", **kwargs):
         super().__init__(*args, **kwargs)
         self.default_n_workers = max(1, int(n_workers))
-
-    # one objective call -> (values, state, user_attr updates are on the trial)
-    def _evaluate_one(self, objective: Callable[[Trial], object], trial: Trial,
-                      catch: Tuple) -> Tuple[Optional[object], TrialState]:
-        try:
-            return objective(trial), TrialState.COMPLETE
-        except TrialPruned:
-            return None, TrialState.PRUNED
-        except HardConstraintViolated as e:
-            trial.set_user_attr("violated", {"name": e.name, "value": e.value, "limit": e.limit})
-            return None, TrialState.INFEASIBLE
-        except catch as e:  # noqa: B030 — user-supplied exception classes
-            trial.set_user_attr("error", repr(e))
-            return None, TrialState.FAIL
+        self.default_backend = backend
 
     def optimize(self, objective: Callable[[Trial], object], n_trials: int,
-                 n_workers: Optional[int] = None, catch: Tuple = ()) -> None:
+                 n_workers: Optional[int] = None, catch: Tuple = (),
+                 backend: Optional[Union[str, BaseExecutor]] = None) -> None:
         workers = max(1, int(n_workers if n_workers is not None else self.default_n_workers))
+        executor = make_executor(backend if backend is not None else self.default_backend)
         remaining = int(n_trials)
 
         # Evaluate the first trial synchronously: it registers the space's
@@ -71,27 +75,26 @@ class ParallelStudy(Study):
         # scheduling order.
         if remaining > 0 and not self.trials:
             trial = self.ask()
-            values, state = self._evaluate_one(objective, trial, catch)
+            values, state = evaluate_trial(objective, trial, catch)
             self.tell(trial, values, state)
             remaining -= 1
 
-        with ThreadPoolExecutor(max_workers=workers) as pool:
+        if remaining <= 0:
+            return
+        executor.start(workers)
+        try:
             while remaining > 0:
                 batch = [self.ask() for _ in range(min(workers, remaining))]
-                futures = [pool.submit(self._evaluate_one, objective, t, catch) for t in batch]
-                # Drain the whole batch before surfacing any uncaught
-                # objective exception: the sibling evaluations already ran,
-                # so their results must be told (and persisted) rather than
-                # silently discarded, leaving trials stranded as RUNNING.
-                outcomes = []
-                for fut in futures:
-                    try:
-                        outcomes.append(fut.result())
-                    except BaseException as e:  # uncaught objective error
-                        outcomes.append(e)
-                # tell in trial order — futures are ordered like the batch,
-                # so storage appends and sampler population updates are
-                # deterministic even when evaluations finish out of order
+                # The executor drains the whole batch before surfacing any
+                # uncaught objective exception: the sibling evaluations
+                # already ran, so their results must be told (and
+                # persisted) rather than silently discarded, leaving
+                # trials stranded as RUNNING.
+                outcomes = executor.run_batch(self, objective, batch, catch)
+                # tell in trial order — outcomes are ordered like the
+                # batch, so storage appends and sampler population updates
+                # are deterministic even when evaluations finish out of
+                # order
                 error: Optional[BaseException] = None
                 for trial, outcome in zip(batch, outcomes):
                     if isinstance(outcome, BaseException):
@@ -104,3 +107,5 @@ class ParallelStudy(Study):
                 if error is not None:
                     raise error
                 remaining -= len(batch)
+        finally:
+            executor.shutdown()

@@ -10,11 +10,19 @@ block expansion).
 """
 from __future__ import annotations
 
-import math
 import random
-from collections import defaultdict
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
+from repro.search.detached import (
+    DetachedEvolution,
+    DetachedGrid,
+    DetachedNSGA2,
+    DetachedSampler,
+    DetachedTPE,
+    grid_value,
+    tpe_pick,
+    tpe_split,
+)
 from repro.search.trial import Distribution, Trial, TrialState
 
 
@@ -43,6 +51,14 @@ class BaseSampler:
         population-based samplers snapshot parents here so their shared
         ``self.rng`` is never touched from worker threads."""
 
+    def detached(self, study, trial: Trial) -> DetachedSampler:
+        """Picklable sampling plan for evaluating ``trial`` in another
+        process (see :mod:`repro.search.detached`).  The default plan is
+        pure per-trial-stream random — correct for ``RandomSampler``;
+        samplers that consult study state must override this to snapshot
+        whatever their ``sample`` reads.  Called under the study lock."""
+        return DetachedSampler(self._base_seed)
+
 
 class RandomSampler(BaseSampler):
     def sample(self, study, trial, name, dist):
@@ -52,29 +68,16 @@ class RandomSampler(BaseSampler):
 class GridSampler(BaseSampler):
     """Exhaustive sweep over categorical/int grids (continuous -> random)."""
 
-    def __init__(self, seed: Optional[int] = None):
-        super().__init__(seed)
-        self._cursor: Dict[str, int] = defaultdict(int)
-
     def sample(self, study, trial, name, dist):
         if dist.kind == "float":
             return dist.random(self.trial_rng(trial))
-        grid = dist.grid()
         # position determined by trial number so the cartesian product is
         # swept in mixed-radix order across trials
         with study._lock:
-            seen_dists = study.distribution_registry
-            if name not in seen_dists:
-                seen_dists[name] = dist
-            names = sorted(seen_dists)
-            radix = 1
-            for n in names:
-                if n == name:
-                    break
-                d = seen_dists[n]
-                if d.kind != "float":
-                    radix *= max(1, len(d.grid()))
-        return grid[(trial.number // radix) % len(grid)]
+            return grid_value(study.distribution_registry, name, dist, trial.number)
+
+    def detached(self, study, trial):
+        return DetachedGrid(self._base_seed, study.distribution_registry)
 
 
 class TPESampler(BaseSampler):
@@ -92,44 +95,37 @@ class TPESampler(BaseSampler):
         self.n_candidates = n_candidates
         self.n_startup = n_startup
 
-    def _split(self, study, name):
-        done = [
-            t for t in study.trials
-            if t.state == TrialState.COMPLETE and name in t.params and t.values
+    @staticmethod
+    def _records(study) -> List[Tuple[Dict[str, Any], float]]:
+        return [
+            (t.params, t.values[0]) for t in study.trials
+            if t.state == TrialState.COMPLETE and t.values
         ]
-        if len(done) < self.n_startup:
-            return None, None
-        sign = 1.0 if study.directions[0] == "minimize" else -1.0
-        done.sort(key=lambda t: sign * t.values[0])
-        n_good = max(1, int(self.gamma * len(done)))
-        return done[:n_good], done[n_good:]
+
+    @staticmethod
+    def _sign(study) -> float:
+        return 1.0 if study.directions[0] == "minimize" else -1.0
 
     def sample(self, study, trial, name, dist):
         rng = self.trial_rng(trial)
-        good, bad = self._split(study, name)
-        if good is None:
+        gvals, bvals = tpe_split(
+            self._records(study), name, self.n_startup, self.gamma, self._sign(study))
+        if gvals is None:
             return dist.random(rng)
-        gvals = [t.params[name] for t in good]
-        bvals = [t.params[name] for t in bad] or gvals
-        if dist.kind == "categorical":
-            def score(c):
-                lg = (gvals.count(c) + 0.5) / (len(gvals) + 0.5 * len(dist.choices))
-                lb = (bvals.count(c) + 0.5) / (len(bvals) + 0.5 * len(dist.choices))
-                return lg / lb
-            return max(dist.choices, key=score)
-        # continuous / int: KDE with Scott bandwidth over candidates
-        lo, hi = float(dist.low), float(dist.high)
-        width = max(hi - lo, 1e-12)
+        return tpe_pick(rng, dist, gvals, bvals, self.n_candidates)
 
-        def kde(vals, x):
-            bw = max(1.06 * width * len(vals) ** -0.2, width / 50)
-            return sum(math.exp(-0.5 * ((x - v) / bw) ** 2) for v in vals) / (len(vals) * bw)
-
-        cands = [dist.random(rng) for _ in range(self.n_candidates)]
-        best = max(cands, key=lambda x: (kde(gvals, x) + 1e-12) / (kde(bvals, x) + 1e-12))
-        if dist.kind == "int":
-            best = dist.snap_int(best)
-        return best
+    def detached(self, study, trial):
+        # One records snapshot per batch, not per trial: every plan in a
+        # batch sees the same completed set (tells only happen between
+        # batches, and asks bump len(study.trials) before plans are
+        # built), so key the memo on the trial count.  Each worker submit
+        # still pickles the shared list — inherent to shipping TPE state.
+        key = len(study.trials)
+        cached = getattr(self, "_detached_snapshot", None)
+        if cached is None or cached[0] != key:
+            cached = self._detached_snapshot = (key, self._records(study))
+        return DetachedTPE(self._base_seed, cached[1], self.gamma,
+                           self.n_candidates, self.n_startup, self._sign(study))
 
 
 class RegularizedEvolutionSampler(BaseSampler):
@@ -163,6 +159,10 @@ class RegularizedEvolutionSampler(BaseSampler):
         if parent is None or name not in parent or name in self._mutated.get(trial.number, ()):
             return dist.random(self.trial_rng(trial))
         return parent[name]
+
+    def detached(self, study, trial):
+        return DetachedEvolution(self._base_seed, self._parent_params.get(trial.number),
+                                 self._mutated.get(trial.number, ()))
 
 
 def _dominates(a, b, directions) -> bool:
@@ -238,26 +238,16 @@ class NSGA2Sampler(BaseSampler):
         }
         self._parent_params[trial.number] = child
 
-    def _mutate(self, rng, dist, value):
-        """Local (polynomial-style) mutation: perturb the inherited value
-        instead of resampling uniformly, so late mutations explore around
-        the current front rather than teleporting across the domain."""
-        if dist.kind == "float":
-            span = float(dist.high) - float(dist.low)
-            v = value + rng.gauss(0.0, 0.15 * span)
-            return min(max(v, float(dist.low)), float(dist.high))
-        if dist.kind == "int":
-            span = int(dist.high) - int(dist.low)
-            step = int(dist.step or 1)
-            v = value + rng.gauss(0.0, max(0.15 * span, step))
-            return dist.snap_int(v)
-        return dist.random(rng)
-
     def sample(self, study, trial, name, dist):
         rng = self.trial_rng(trial)
         parent = self._parent_params.get(trial.number)
         if parent is None or name not in parent or parent[name] is None:
             return dist.random(rng)
         if rng.random() < self.mutation_p:
-            return self._mutate(rng, dist, parent[name])
+            # local (polynomial-style) mutation around the inherited value
+            return dist.perturb(rng, parent[name])
         return parent[name]
+
+    def detached(self, study, trial):
+        return DetachedNSGA2(self._base_seed, self._parent_params.get(trial.number),
+                             self.mutation_p)

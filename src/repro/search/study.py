@@ -14,11 +14,7 @@ import os
 import threading
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-try:
-    import fcntl
-except ImportError:  # pragma: no cover — non-POSIX hosts
-    fcntl = None
-
+from repro.ioutils import locked_append
 from repro.search.samplers import BaseSampler, RandomSampler, pareto_front
 from repro.search.trial import Distribution, Trial, TrialState
 
@@ -31,6 +27,25 @@ class HardConstraintViolated(Exception):
     def __init__(self, name: str, value: float, limit: float):
         super().__init__(f"hard constraint '{name}' violated: {value} > {limit}")
         self.name, self.value, self.limit = name, value, limit
+
+
+def evaluate_trial(objective: Callable[[Trial], object], trial,
+                   catch: Tuple) -> Tuple[Optional[object], TrialState]:
+    """One objective call -> (values, state); control-flow exceptions map
+    to trial states, anything else propagates to the caller.  The single
+    source of this mapping: the serial Study loop and every executor
+    backend (``repro.search.executors``) go through it, so they cannot
+    drift."""
+    try:
+        return objective(trial), TrialState.COMPLETE
+    except TrialPruned:
+        return None, TrialState.PRUNED
+    except HardConstraintViolated as e:
+        trial.set_user_attr("violated", {"name": e.name, "value": e.value, "limit": e.limit})
+        return None, TrialState.INFEASIBLE
+    except catch as e:  # noqa: B030 — user-supplied exception classes
+        trial.set_user_attr("error", repr(e))
+        return None, TrialState.FAIL
 
 
 class Study:
@@ -82,20 +97,11 @@ class Study:
         if not self.storage:
             return
         os.makedirs(os.path.dirname(self.storage) or ".", exist_ok=True)
-        line = json.dumps({"kind": "trial", "trial": trial.to_dict()}) + "\n"
         # Lock-safe append: serialized against sibling threads by the study
         # lock (callers hold it) and against other processes sharing the
-        # storage file by an OS advisory lock around a single write().
-        with open(self.storage, "a") as f:
-            if fcntl is not None:
-                fcntl.flock(f.fileno(), fcntl.LOCK_EX)
-            try:
-                f.write(line)
-                f.flush()
-                os.fsync(f.fileno())
-            finally:
-                if fcntl is not None:
-                    fcntl.flock(f.fileno(), fcntl.LOCK_UN)
+        # storage file by the flock inside locked_append.
+        locked_append(self.storage,
+                      json.dumps({"kind": "trial", "trial": trial.to_dict()}) + "\n")
 
     # -- ask / tell -------------------------------------------------------------
 
@@ -107,12 +113,22 @@ class Study:
             return trial
 
     def tell(self, trial: Trial, values, state: TrialState = TrialState.COMPLETE) -> None:
-        if values is not None:
-            if isinstance(values, (int, float)):
-                values = (float(values),)
-            trial.values = tuple(float(v) for v in values)
-        trial.state = state
+        # The whole transition happens under the study lock: concurrent
+        # best_trial / completed_trials readers must never observe a trial
+        # whose state says COMPLETE while values is still being written
+        # (or vice versa), and storage must get exactly one final record.
         with self._lock:
+            if trial.state != TrialState.RUNNING:
+                raise RuntimeError(
+                    f"trial {trial.number} was already told "
+                    f"(state={trial.state.value}); telling it again would "
+                    "append a duplicate record to storage"
+                )
+            if values is not None:
+                if isinstance(values, (int, float)):
+                    values = (float(values),)
+                trial.values = tuple(float(v) for v in values)
+            trial.state = state
             self._persist(trial)
 
     # -- optimize ---------------------------------------------------------------
@@ -121,26 +137,15 @@ class Study:
                  catch: Tuple = ()) -> None:
         for _ in range(n_trials):
             trial = self.ask()
-            try:
-                values = objective(trial)
-            except TrialPruned:
-                self.tell(trial, None, TrialState.PRUNED)
-                continue
-            except HardConstraintViolated as e:
-                trial.set_user_attr("violated", {"name": e.name, "value": e.value, "limit": e.limit})
-                self.tell(trial, None, TrialState.INFEASIBLE)
-                continue
-            except catch as e:  # noqa: B030 — user-supplied exception classes
-                trial.set_user_attr("error", repr(e))
-                self.tell(trial, None, TrialState.FAIL)
-                continue
-            self.tell(trial, values)
+            values, state = evaluate_trial(objective, trial, catch)
+            self.tell(trial, values, state)
 
     # -- results ---------------------------------------------------------------
 
     @property
     def completed_trials(self) -> List[Trial]:
-        return [t for t in self.trials if t.state == TrialState.COMPLETE and t.values]
+        with self._lock:
+            return [t for t in self.trials if t.state == TrialState.COMPLETE and t.values]
 
     @property
     def best_trial(self) -> Optional[Trial]:
@@ -153,4 +158,5 @@ class Study:
     @property
     def best_trials(self) -> List[Trial]:
         """Pareto-optimal set under all directions."""
-        return pareto_front(self.trials, self.directions)
+        with self._lock:
+            return pareto_front(self.trials, self.directions)

@@ -46,6 +46,22 @@ class Distribution:
         v = lo + step * int(round((value - lo) / step))
         return max(lo, min(v, lo + step * ((hi - lo) // step)))
 
+    def perturb(self, rng, value: Any) -> Any:
+        """Local (polynomial-style) mutation: perturb ``value`` instead of
+        resampling uniformly, so late mutations explore around the current
+        front rather than teleporting across the domain.  Categorical
+        distributions fall back to a uniform resample."""
+        if self.kind == "float":
+            span = float(self.high) - float(self.low)
+            v = value + rng.gauss(0.0, 0.15 * span)
+            return min(max(v, float(self.low)), float(self.high))
+        if self.kind == "int":
+            span = int(self.high) - int(self.low)
+            step = int(self.step or 1)
+            v = value + rng.gauss(0.0, max(0.15 * span, step))
+            return self.snap_int(v)
+        return self.random(rng)
+
     def random(self, rng) -> Any:
         if self.kind == "categorical":
             return self.choices[rng.randrange(len(self.choices))]
@@ -136,6 +152,7 @@ class Trial:
             "distributions": {k: d.to_dict() for k, d in self.distributions.items()},
             "intermediate": {str(k): v for k, v in self.intermediate.items()},
             "user_attrs": self.user_attrs,
+            "system_attrs": self.system_attrs,
         }
 
     @classmethod
@@ -149,6 +166,7 @@ class Trial:
         }
         t.intermediate = {int(k): v for k, v in d.get("intermediate", {}).items()}
         t.user_attrs = dict(d.get("user_attrs", {}))
+        t.system_attrs = dict(d.get("system_attrs", {}))
         return t
 
     @property

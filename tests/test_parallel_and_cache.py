@@ -280,6 +280,214 @@ def test_distribution_survives_roundtrip(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# disk-persistent cache tier
+# ---------------------------------------------------------------------------
+
+def test_disk_cache_roundtrip_between_instances(tmp_path):
+    from repro.evaluation import DiskEvaluationCache
+
+    d = str(tmp_path / "store")
+    a = DiskEvaluationCache(d)
+    key = ("latency_s", "host_cpu", 2, "sig[conv1d]")
+    assert a.store(key, 0.125)
+    # a second instance simulates a sibling/restarted process
+    b = DiskEvaluationCache(d)
+    found, value = b.lookup(key)
+    assert found and value == 0.125
+    # entries appended AFTER construction are found via tail re-scan
+    assert a.store(("x",), 1.0)
+    found, value = b.lookup(("x",))
+    assert found and value == 1.0
+    assert len(b) == 2
+
+
+def test_disk_cache_detects_sibling_truncation(tmp_path):
+    """A sibling's clear() truncates the store; instances holding an old
+    byte offset must drop their stale view instead of serving it (or
+    parsing the regrown file mid-record)."""
+    from repro.evaluation import DiskEvaluationCache
+
+    d = str(tmp_path / "store")
+    a = DiskEvaluationCache(d)
+    a.store(("k1",), 1.0)
+    a.store(("k2",), 2.0)
+    b = DiskEvaluationCache(d)  # warm-loaded: offset at end of both records
+    assert b.lookup(("k1",)) == (True, 1.0)
+    a.clear()
+    a.store(("k3",), 3.0)  # store is now shorter than b's offset
+    assert b.lookup(("k1",)) == (False, None)  # stale view dropped
+    assert b.lookup(("k3",)) == (True, 3.0)    # rebuilt view served
+
+
+def test_disk_cache_skips_unserializable_values(tmp_path):
+    from repro.evaluation import DiskEvaluationCache
+
+    d = DiskEvaluationCache(str(tmp_path / "store"))
+    assert not d.store(("artifact", "k"), object())  # e.g. a compiled executable
+    assert not d.store((object(),), 1.0)             # non-JSON key part
+    assert len(d) == 0
+
+
+def test_cache_disk_tier_read_through_and_write_through(tmp_path):
+    d = str(tmp_path / "store")
+    calls = []
+    c1 = EvaluationCache(disk=d)
+    assert c1.get_or_compute(("k", 1), lambda: calls.append(1) or 7.5) == 7.5
+    assert calls == [1] and c1.stats.misses == 1
+    # a fresh cache over the same store serves the value without compute
+    c2 = EvaluationCache(disk=d)
+    assert c2.get_or_compute(("k", 1), lambda: calls.append(2) or -1.0) == 7.5
+    assert calls == [1]
+    assert c2.stats.misses == 0 and c2.stats.disk_hits == 1
+    assert c2.stats.hit_rate == 1.0
+    # second lookup is a pure memory hit
+    assert c2.get_or_compute(("k", 1), lambda: -1.0) == 7.5
+    assert c2.stats.hits == 1
+
+
+def test_disk_cache_warm_restart_zero_compiles(tmp_path):
+    """A restarted study over the same store re-uses every compiled value:
+    zero XLA compiles, hit rate 1.0, identical values."""
+    from repro.hwgen.generator import generate_call_count
+
+    builder = ModelBuilder(SPACE.input_shape, SPACE.output_dim)
+    study = Study(sampler=RandomSampler(seed=0))
+    m = builder.build(sample_architecture(SPACE, study.ask()))
+    d = str(tmp_path / "store")
+
+    lat1 = CompiledLatencyEstimator("host_cpu", batch=1, cache=d, metric="modelled")
+    v1 = lat1.estimate(m)
+    assert lat1.cache.stats.misses == 2  # artifact + value, both computed
+    compiles_after_cold = generate_call_count()
+
+    # "restart": fresh cache + estimator, same store directory
+    lat2 = CompiledLatencyEstimator("host_cpu", batch=1, cache=d, metric="modelled")
+    assert lat2.estimate(m) == v1
+    assert generate_call_count() == compiles_after_cold  # zero new compiles
+    assert lat2.cache.stats.misses == 0
+    assert lat2.cache.stats.disk_hits == 1  # the scalar; no artifact needed
+    assert lat2.cache.stats.hit_rate == 1.0
+
+
+def test_cache_disk_false_means_memory_only():
+    c = EvaluationCache(disk=False)
+    assert c.disk is None
+    assert c.get_or_compute(("k",), lambda: 1.0) == 1.0
+
+
+def test_cache_keeps_empty_disk_tier(tmp_path):
+    """An EMPTY store instance is falsy via __len__ but must stay wired
+    in — dropping it would silently disable persistence on cold hosts."""
+    from repro.evaluation import DiskEvaluationCache
+
+    store = DiskEvaluationCache(str(tmp_path / "store"))
+    c = EvaluationCache(disk=store)
+    assert c.disk is store
+    assert c.get_or_compute(("k",), lambda: 2.0) == 2.0
+    assert store.lookup(("k",)) == (True, 2.0)  # write-through happened
+
+
+def test_disk_error_releases_single_flight(tmp_path):
+    """A disk-tier I/O failure (store dir deleted mid-run, ENOSPC) must
+    release single-flight ownership — not strand waiters forever."""
+    cache = EvaluationCache(disk=str(tmp_path / "store"))
+
+    def bad_lookup(key):
+        raise OSError("store vanished")
+
+    cache.disk.lookup = bad_lookup
+    with pytest.raises(OSError, match="store vanished"):
+        cache.get_or_compute(("k",), lambda: 1.0)
+    # ownership was released: the next caller owns the key cleanly
+    cache.disk.lookup = lambda key: (False, None)
+    cache.disk.store = lambda key, value: True
+    assert cache.get_or_compute(("k",), lambda: 1.0) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# clear() vs in-flight computes
+# ---------------------------------------------------------------------------
+
+def test_clear_drops_inflight_ownership():
+    """A compute that finishes after clear() must not resurrect its (now
+    stale) entry, and stats stay consistently reset."""
+    cache = EvaluationCache()
+    started, release, done = threading.Event(), threading.Event(), []
+
+    def compute():
+        started.set()
+        release.wait(5)
+        return "stale"
+
+    t = threading.Thread(target=lambda: done.append(cache.get_or_compute("k", compute)))
+    t.start()
+    started.wait(5)
+    cache.clear()
+    release.set()
+    t.join(5)
+    assert done == ["stale"]  # the in-flight caller still gets its value
+    assert len(cache) == 0 and cache.get("k") is None  # ...but nothing cached
+    assert cache.stats.as_dict() == {"hits": 0, "disk_hits": 0, "misses": 0,
+                                     "hit_rate": 0.0}
+    # the key is fully released: a new compute owns it cleanly
+    assert cache.get_or_compute("k", lambda: "fresh") == "fresh"
+    assert cache.get("k") == "fresh"
+
+
+# ---------------------------------------------------------------------------
+# search-layer persistence bugfixes
+# ---------------------------------------------------------------------------
+
+def test_double_tell_raises_and_persists_once(tmp_path):
+    path = os.path.join(tmp_path, "s.jsonl")
+    s = Study(sampler=RandomSampler(seed=0), storage=path)
+    t = s.ask()
+    t.suggest_float("x", 0.0, 1.0)
+    s.tell(t, 1.0)
+    with pytest.raises(RuntimeError, match="already told"):
+        s.tell(t, 2.0)
+    assert t.values == (1.0,)  # first result stands
+    with open(path) as f:
+        assert len([l for l in f if l.strip()]) == 1  # no duplicate record
+
+
+def test_system_attrs_survive_resume(tmp_path):
+    path = os.path.join(tmp_path, "s.jsonl")
+    s1 = Study(sampler=RandomSampler(seed=0), storage=path)
+
+    def obj(trial):
+        trial.suggest_float("x", 0.0, 1.0)
+        trial.system_attrs["retries"] = 2
+        trial.system_attrs["scheduler"] = {"host": "worker-3"}
+        return 0.0
+
+    s1.optimize(obj, 1)
+    s2 = Study(storage=path)
+    assert s2.trials[0].system_attrs == {"retries": 2, "scheduler": {"host": "worker-3"}}
+
+
+def test_compile_limit_env_validation(monkeypatch):
+    import warnings as _warnings
+
+    from repro.hwgen import generator
+
+    default = max(1, (os.cpu_count() or 2) // 2)
+    monkeypatch.setenv("REPRO_COMPILE_CONCURRENCY", "two")
+    with pytest.warns(RuntimeWarning, match="REPRO_COMPILE_CONCURRENCY"):
+        assert generator._compile_limit() == default
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error")  # the valid forms must not warn
+        monkeypatch.setenv("REPRO_COMPILE_CONCURRENCY", "")
+        assert generator._compile_limit() == default  # unset-equivalent
+        monkeypatch.setenv("REPRO_COMPILE_CONCURRENCY", "0")
+        assert generator._compile_limit() == 1  # valid int, clamped
+        monkeypatch.setenv("REPRO_COMPILE_CONCURRENCY", "3")
+        assert generator._compile_limit() == 3
+        monkeypatch.delenv("REPRO_COMPILE_CONCURRENCY")
+        assert generator._compile_limit() == default
+
+
+# ---------------------------------------------------------------------------
 # suggest_int(log=True) respects step
 # ---------------------------------------------------------------------------
 
