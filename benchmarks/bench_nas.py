@@ -476,12 +476,80 @@ def bench_process_engine() -> None:
         shutil.rmtree(dir_process, ignore_errors=True)
 
 
+def bench_explorer_facade() -> None:
+    """Facade overhead: the declarative Explorer front door vs the same
+    experiment hand-wired through the layered API.  Both drive identical
+    analytic-estimator searches at a fixed seed, so they must find the
+    identical best trial; the delta is pure composition overhead (spec
+    validation, registry resolution, report assembly), which must stay
+    negligible next to a single XLA compile."""
+    import yaml as _yaml
+
+    from repro import Explorer, ExperimentSpec
+    from repro.evaluation import (
+        CriteriaRunner,
+        FlopsEstimator,
+        OptimizationCriteria,
+        ParamCountEstimator,
+    )
+
+    trials, seed = 40, 0
+
+    def run_hand_wired():
+        space = parse_search_space(SPACE_YAML)
+        builder = ModelBuilder(space.input_shape, space.output_dim)
+        runner = CriteriaRunner([
+            OptimizationCriteria(FlopsEstimator(), kind="objective", weight=1.0),
+            OptimizationCriteria(ParamCountEstimator(), kind="objective", weight=0.1),
+        ])
+
+        def objective(trial):
+            arch = sample_architecture(space, trial)
+            trial.set_user_attr("signature", arch.signature())
+            return runner.evaluate(builder.build(arch), trial=trial)
+
+        study = Study(sampler=TPESampler(seed=seed))
+        study.optimize(objective, trials)
+        return study.best_trial
+
+    def run_facade():
+        spec = ExperimentSpec.from_dict({
+            "name": "bench-facade",
+            "search_space": _yaml.safe_load(SPACE_YAML),
+            "sampler": {"name": "tpe", "seed": seed},
+            "executor": {"backend": "serial"},
+            "criteria": [
+                {"estimator": "flops", "kind": "objective", "weight": 1.0},
+                {"estimator": "n_params", "kind": "objective", "weight": 0.1},
+            ],
+            "budget": {"n_trials": trials},
+        })
+        explorer = Explorer.from_spec(spec)
+        report = explorer.run(save_report=False)
+        return report.best
+
+    t0 = time.perf_counter()
+    hand_best = run_hand_wired()
+    t_hand = time.perf_counter() - t0
+    t1 = time.perf_counter()
+    facade_best = run_facade()
+    t_facade = time.perf_counter() - t1
+
+    best_match = (hand_best.number == facade_best["number"]
+                  and list(hand_best.values) == facade_best["values"])
+    emit("explorer/hand_wired", t_hand / trials, f"best={hand_best.values[0]:.3e}")
+    emit("explorer/facade", t_facade / trials,
+         f"overhead_vs_hand_wired={(t_facade / t_hand - 1) * 100:+.0f}%;"
+         f"best_match={best_match}")
+
+
 def main() -> None:
     bench_samplers()
     bench_builder_throughput()
     bench_estimator_fidelity()
     bench_hil_pipeline()
     bench_preprocessing_joint()
+    bench_explorer_facade()
     bench_parallel_engine()
     bench_process_engine()
 

@@ -1,41 +1,34 @@
-"""Parallel, cache-aware hardware-in-the-loop NAS.
+"""Parallel, cache-aware hardware-in-the-loop NAS — via the Explorer facade.
 
 The serial trial loop is the framework's hottest path: every candidate
 pays an XLA generate + benchmark, and samplers revisit architectures
-constantly.  This example runs the same staged-criteria search as
-``nas_conv1d.py`` through the parallel evaluation engine:
+constantly.  This example runs the same staged-criteria search twice —
+serial, then on a parallel executor backend — by building two
+:class:`ExperimentSpec`s that differ only in their ``executor:`` block,
+and compares the resulting :class:`ExplorationReport`s:
 
-  * ``ParallelStudy`` overlaps objective evaluations on a pluggable
-    executor backend — ``thread`` (pool in-process) or ``process``
-    (worker processes, real compile concurrency) — while keeping results
-    reproducible (per-trial sampler RNG streams, tell-in-trial-order);
-  * one shared ``EvaluationCache`` memoizes compiled artifacts and
-    estimator values by the candidate's full signature (layers AND
-    pre-processing), so the latency and memory estimators compile each
-    distinct candidate once — across all workers;
+  * the facade composes ``ParallelStudy`` + the executor + one shared
+    ``EvaluationCache`` from the spec, so the latency and memory
+    estimators compile each distinct candidate once — across all workers;
   * with ``--cache-dir`` the scalar values also persist to a disk store,
     so a re-run (or the process workers, which each build their own
-    in-memory cache) compiles each architecture at most once per host.
+    in-memory cache) compiles each architecture at most once per host;
+  * at a fixed seed both runs must find the identical best trial
+    (per-trial sampler RNG streams, tell-in-trial-order) — asserted.
 
     PYTHONPATH=src python examples/nas_parallel.py --trials 24 --workers 4
     PYTHONPATH=src python examples/nas_parallel.py --backend process \\
         --trials 12 --workers 2 --cache-dir results/cache
+
+The equivalent hand-wired wiring (space/builder/runner/study built
+explicitly) lives in benchmarks/bench_nas.py; the layered API remains
+fully available underneath the facade.
 """
 import argparse
-import time
 
-from repro.core.builder import ModelBuilder
-from repro.core.space import parse_search_space
-from repro.core.translate import sample_architecture
-from repro.evaluation import (
-    CompiledLatencyEstimator,
-    CompiledMemoryEstimator,
-    CriteriaRunner,
-    EvaluationCache,
-    OptimizationCriteria,
-    ParamCountEstimator,
-)
-from repro.search import ParallelStudy, RandomSampler, Study
+import yaml
+
+from repro import Explorer, ExperimentSpec
 
 SPACE_YAML = """
 input: [4, 256]
@@ -83,57 +76,29 @@ sequence:
 """
 
 
-def build_runner(cache: EvaluationCache) -> CriteriaRunner:
-    # hard memory budget -> latency objective; the shared cache means the
-    # two compiled estimators generate ONE artifact per candidate
-    return CriteriaRunner([
-        OptimizationCriteria(ParamCountEstimator(), kind="hard_constraint", limit=1e6),
-        OptimizationCriteria(CompiledMemoryEstimator("host_cpu", batch=8),
-                             kind="soft_constraint", limit=64e6, weight=0.1),
-        OptimizationCriteria(CompiledLatencyEstimator("host_cpu", batch=8, metric="modelled"),
-                             kind="objective", direction="minimize"),
-    ], cache=cache)
-
-
-# Per-process lazy state keyed by (space, cache_dir, tag): the objective
-# below holds only strings, so it pickles across the process boundary;
-# each process-pool worker re-imports this module and builds its own
-# space/builder/runner, sharing compiled values via the disk store.
-_STATE = {}
-
-
-class NASObjective:
-    def __init__(self, space_yaml: str, cache_dir=None, tag: str = "shared"):
-        self.space_yaml = space_yaml
-        self.cache_dir = cache_dir
-        self.tag = tag
-
-    def _setup(self):
-        key = (self.space_yaml, self.cache_dir, self.tag)
-        state = _STATE.get(key)
-        if state is None:
-            space = parse_search_space(self.space_yaml)
-            builder = ModelBuilder(space.input_shape, space.output_dim)
-            cache = EvaluationCache(disk=self.cache_dir) if self.cache_dir else EvaluationCache()
-            state = _STATE[key] = (space, builder, build_runner(cache), cache)
-        return state
-
-    @property
-    def cache(self) -> EvaluationCache:
-        return self._setup()[3]
-
-    def __call__(self, trial):
-        space, builder, runner, _ = self._setup()
-        arch = sample_architecture(space, trial)
-        model = builder.build(arch)
-        trial.set_user_attr("signature", arch.signature())
-        return runner.evaluate(model, trial=trial)
-
-
-def run(study, objective, trials, **opt_kw) -> float:
-    t0 = time.perf_counter()
-    study.optimize(objective, trials, **opt_kw)
-    return time.perf_counter() - t0
+def make_spec(args, tag: str, backend: str, n_workers: int,
+              n_trials: int = None, seed: int = None) -> ExperimentSpec:
+    """One declarative experiment; serial and parallel runs differ only
+    in the ``executor`` block (and their name/report artifact)."""
+    return ExperimentSpec.from_dict({
+        "name": f"nas-parallel-{tag}",
+        "search_space": yaml.safe_load(TINY_SPACE_YAML if args.tiny else SPACE_YAML),
+        "sampler": {"name": "random", "seed": args.seed if seed is None else seed},
+        "executor": {"backend": backend, "n_workers": n_workers},
+        # hard memory budget -> latency objective; the shared cache means
+        # the two compiled estimators generate ONE artifact per candidate
+        "criteria": [
+            {"estimator": "n_params", "kind": "hard_constraint", "limit": 1e6},
+            {"estimator": "peak_bytes", "kind": "soft_constraint",
+             "limit": 64e6, "weight": 0.1, "params": {"batch": 8}},
+            {"estimator": "latency_s", "kind": "objective",
+             "params": {"batch": 8, "metric": "modelled"}},
+        ],
+        "target": "host_cpu",
+        "cache": {"dir": args.cache_dir},
+        "budget": {"n_trials": args.trials if n_trials is None else n_trials},
+        "report_dir": "results",
+    })
 
 
 def main():
@@ -142,7 +107,7 @@ def main():
     p.add_argument("--workers", type=int, default=4)
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--backend", choices=("serial", "thread", "process"), default="thread",
-                   help="executor backend for the parallel study")
+                   help="executor backend for the parallel run")
     p.add_argument("--cache-dir", default=None,
                    help="disk-persistent value store (e.g. results/cache); "
                         "re-runs and process workers then skip every compile "
@@ -152,26 +117,21 @@ def main():
     args = p.parse_args()
     if args.trials < 1:
         raise SystemExit("--trials must be >= 1")
-    space_yaml = TINY_SPACE_YAML if args.tiny else SPACE_YAML
 
     # untimed warmup so the serial run doesn't absorb jax's one-time
     # tracing/backend-init cost and skew the speedup
-    run(Study(sampler=RandomSampler(seed=999)),
-        NASObjective(space_yaml, tag="warmup"), 1)
+    Explorer.from_spec(make_spec(args, "warmup", "serial", 1,
+                                 n_trials=1, seed=999)).run(save_report=False)
 
-    serial_obj = NASObjective(space_yaml, args.cache_dir, tag="serial")
-    serial = Study(sampler=RandomSampler(seed=args.seed))
-    t_serial = run(serial, serial_obj, args.trials)
+    serial = Explorer.from_spec(make_spec(args, "serial", "serial", 1)).run()
+    par = Explorer.from_spec(
+        make_spec(args, args.backend, args.backend, args.workers)).run()
 
-    par_obj = NASObjective(space_yaml, args.cache_dir, tag="parallel")
-    par = ParallelStudy(sampler=RandomSampler(seed=args.seed),
-                        n_workers=args.workers, backend=args.backend)
-    t_par = run(par, par_obj, args.trials, n_workers=args.workers)
-
-    print(f"\nserial:   {args.trials} trials in {t_serial:.1f}s "
-          f"({args.trials / t_serial:.2f} trials/s, cache {serial_obj.cache.stats.as_dict()})")
-    print(f"{args.backend}: {args.trials} trials in {t_par:.1f}s "
-          f"({args.trials / t_par:.2f} trials/s, parent cache {par_obj.cache.stats.as_dict()})")
+    print(f"\nserial:   {serial.n_trials} trials in {serial.wall_clock_s:.1f}s "
+          f"({serial.n_trials / serial.wall_clock_s:.2f} trials/s, "
+          f"cache {serial.cache})")
+    print(f"{args.backend}: {par.n_trials} trials in {par.wall_clock_s:.1f}s "
+          f"({par.n_trials / par.wall_clock_s:.2f} trials/s, cache {par.cache})")
     caveat = (
         "cache-assisted: both runs share the persistent store, so this measures "
         "disk-cache reuse, not the executor backend"
@@ -179,14 +139,15 @@ def main():
         "same-process runs share jax's warm caches — see benchmarks/bench_nas.py "
         "parallel/ and process/ for isolated measurements"
     )
-    print(f"speedup: {t_serial / t_par:.2f}x with {args.workers} {args.backend} workers "
-          f"({caveat})")
+    print(f"speedup: {serial.wall_clock_s / par.wall_clock_s:.2f}x with "
+          f"{args.workers} {args.backend} workers ({caveat})")
 
-    bs, bp = serial.best_trial, par.best_trial
-    print(f"\nserial best        #{bs.number}: score={bs.values[0]:.3e}")
-    print(f"{args.backend} best #{bp.number}: score={bp.values[0]:.3e}")
-    assert bs.values == bp.values, "fixed seed + modelled latency must reproduce"
-    print("arch:", bp.user_attrs["signature"])
+    bs, bp = serial.best, par.best
+    print(f"\nserial best        #{bs['number']}: score={bs['values'][0]:.3e}")
+    print(f"{args.backend} best #{bp['number']}: score={bp['values'][0]:.3e}")
+    assert bs["values"] == bp["values"], "fixed seed + modelled latency must reproduce"
+    print("arch:", bp["signature"])
+    print("reports:", serial.artifact, "+", par.artifact)
 
 
 if __name__ == "__main__":

@@ -1,57 +1,66 @@
-"""Quickstart: declarative search space -> NAS -> best model in ~30 lines.
+"""Quickstart: one YAML experiment -> Explorer.run() -> report + best model.
 
     PYTHONPATH=src python examples/quickstart.py
+
+The declarative front door (paper's unified interface): the experiment
+file names the search space, sampler, criteria, and budget; the Explorer
+composes the layered API (parse_search_space + ModelBuilder + estimators
++ CriteriaRunner + ParallelStudy + executor) that earlier revisions of
+this script wired by hand.  The hand-wired path still works — see
+``hand_wired()`` below, which the facade reproduces trial-for-trial at
+the same seed (asserted in tests/test_explorer.py).
 """
+import os
+
 import jax
 import jax.numpy as jnp
 
-from repro.core.builder import ModelBuilder
-from repro.core.space import parse_search_space
-from repro.core.translate import sample_architecture
-from repro.evaluation import FlopsEstimator, ParamCountEstimator
-from repro.search import Study, TPESampler
+from repro import Explorer
 
-SPACE = parse_search_space("""
-input: [3, 256]
-output: 4
-sequence:
-  - block: "features"
-    op_candidates: "conv1d"
-    type_repeat:
-      type: "repeat_op"
-      depth: [1, 2, 3]
-  - block: "head"
-    op_candidates: "linear"
-    linear:
-      width: [16, 32, 64]
-default_op_params:
-  conv1d:
-    kernel_size: [3, 5]
-    out_channels: [8, 16, 32]
-    stride: [1, 2]
-""")
-
-builder = ModelBuilder(SPACE.input_shape, SPACE.output_dim)
-flops, nparams = FlopsEstimator(), ParamCountEstimator()
+EXPERIMENT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "experiments", "quickstart.yaml")
 
 
-def objective(trial):
-    arch = sample_architecture(SPACE, trial)
-    model = builder.build(arch)
-    trial.set_user_attr("signature", arch.signature())
-    # minimize FLOPs subject to an (implicit) param budget via weighted sum
-    return flops.estimate(model) + 0.1 * nparams.estimate(model)
+def hand_wired():
+    """The same experiment through the layered API — kept as the
+    reference wiring the facade is sugar over."""
+    import yaml
+
+    from repro.core.builder import ModelBuilder
+    from repro.core.space import parse_search_space
+    from repro.core.translate import sample_architecture
+    from repro.evaluation import FlopsEstimator, ParamCountEstimator
+    from repro.search import Study, TPESampler
+
+    with open(EXPERIMENT) as f:
+        raw = yaml.safe_load(f)
+    space = parse_search_space(raw["search_space"])
+    builder = ModelBuilder(space.input_shape, space.output_dim)
+    flops, nparams = FlopsEstimator(), ParamCountEstimator()
+
+    def objective(trial):
+        arch = sample_architecture(space, trial)
+        model = builder.build(arch)
+        trial.set_user_attr("signature", arch.signature())
+        # minimize FLOPs subject to an (implicit) param budget via weighted sum
+        return flops.estimate(model) + 0.1 * nparams.estimate(model)
+
+    study = Study(name="quickstart", sampler=TPESampler(seed=0))
+    study.optimize(objective, raw["budget"]["n_trials"])
+    return study
 
 
 def main():
-    study = Study(name="quickstart", sampler=TPESampler(seed=0))
-    study.optimize(objective, 25)
-    best = study.best_trial
-    print(f"best score {best.values[0]:,.0f} — {best.user_attrs['signature']}")
+    explorer = Explorer.from_yaml(EXPERIMENT)
+    report = explorer.run()
+
+    best = report.best
+    print(f"best score {best['values'][0]:,.0f} — {best['signature']}")
+    print(f"per-criterion: {report.criteria_values}")
+    print(f"report artifact: {report.artifact}")
 
     # rebuild + run the winning architecture
-    arch = sample_architecture(SPACE, best)
-    model = builder.build(arch)
+    model = explorer.best_model()
     params = model.init(jax.random.PRNGKey(0))
     y = model.apply(params, jnp.ones((2, 256, 3)))
     print("output:", y.shape, "| params:", f"{model.n_params:,}")

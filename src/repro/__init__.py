@@ -1,0 +1,44 @@
+"""repro: hardware-aware NAS on a JAX/Pallas substrate.
+
+The package initializer re-exports the unified Explorer facade — the
+stable front API — lazily (PEP 562), so ``import repro.kernels`` and
+friends don't pay for (or cycle through) the search/evaluation stack.
+
+    from repro import Explorer
+
+    report = Explorer.from_yaml("examples/experiments/quickstart.yaml").run()
+
+The layered API (``repro.core``, ``repro.search``, ``repro.evaluation``,
+``repro.hwgen``, ...) remains the extension surface; the facade only
+composes it.
+"""
+from __future__ import annotations
+
+import importlib
+
+_EXPORTS = {
+    "Explorer": "repro.explorer.explorer",
+    "ExplorationReport": "repro.explorer.explorer",
+    "ExperimentSpec": "repro.explorer.experiment",
+    "ExperimentError": "repro.explorer.experiment",
+    "ExplorerError": "repro.explorer.registry",
+    "UnknownComponentError": "repro.explorer.registry",
+    "register_component": "repro.explorer.registry",
+}
+
+__all__ = sorted(_EXPORTS)
+
+# public alias: `register` is too generic a name at the top level
+_ALIASES = {"register_component": "register"}
+
+
+def __getattr__(name: str):
+    try:
+        module = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(f"module 'repro' has no attribute {name!r}") from None
+    return getattr(importlib.import_module(module), _ALIASES.get(name, name))
+
+
+def __dir__():
+    return __all__

@@ -37,8 +37,20 @@ class OptimizationCriteria:
     weight: float = 1.0
     limit: Optional[float] = None  # constraints: threshold
 
+    KINDS = ("objective", "soft_constraint", "hard_constraint")
+    DIRECTIONS = ("minimize", "maximize")
+
     def __post_init__(self):
-        assert self.kind in ("objective", "soft_constraint", "hard_constraint"), self.kind
+        # real raises, not asserts: criteria frequently come from config
+        # (YAML experiments), and asserts vanish under ``python -O``
+        if self.kind not in self.KINDS:
+            raise ValueError(
+                f"unknown criteria kind {self.kind!r}; expected one of {self.KINDS}"
+            )
+        if self.direction not in self.DIRECTIONS:
+            raise ValueError(
+                f"unknown direction {self.direction!r}; expected one of {self.DIRECTIONS}"
+            )
         if self.kind != "objective" and self.limit is None:
             raise ValueError(f"{self.kind} requires a limit")
 
@@ -68,6 +80,19 @@ class CriteriaRunner:
         cache=None,
     ):
         self.criteria = list(criteria)
+        # values (and the weighted_sum aggregation) key by estimator name:
+        # two criteria sharing a name would silently overwrite each other,
+        # dropping one from the score — fail loudly at construction instead
+        by_name: Dict[str, OptimizationCriteria] = {}
+        for c in self.criteria:
+            name = c.estimator.name
+            if name in by_name:
+                raise ValueError(
+                    f"criteria share estimator name {name!r}: {by_name[name]!r} "
+                    f"and {c!r} — values aggregate by name, so one would be "
+                    f"silently dropped; give the estimators distinct .name values"
+                )
+            by_name[name] = c
         self.aggregator = aggregator
         # One shared EvaluationCache for every compiled-cost estimator in
         # the runner: candidates evaluated under several criteria (e.g.

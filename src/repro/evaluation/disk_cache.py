@@ -11,12 +11,15 @@ architecture at most once per host:
     store directory (default ``results/cache/``), one record per value:
     ``{"key": <canonical key>, "value": <scalar>}``;
   * keys are the cache's own tuples — estimator name, target, batch,
-    full architecture signature (layers AND pre-processing) —
-    canonicalized to a JSON string, so a changed architecture, target,
-    or batch size can never alias an old entry.  **Invalidation** is
-    therefore structural: entries never go stale as long as signatures
-    capture the program; to force a rebuild (e.g. after a toolchain
-    upgrade that changes compile results), delete the store directory;
+    full architecture signature (layers AND pre-processing) — wrapped
+    together with a **toolchain salt** (the jax/jaxlib versions, see
+    :func:`toolchain_versions`) and canonicalized to a JSON string, so a
+    changed architecture, target, batch size, or XLA toolchain can never
+    alias an old entry.  **Invalidation** is therefore structural:
+    entries never go stale as long as signatures capture the program,
+    and a jax/jaxlib upgrade (which can change compiled latency and
+    memory results) simply stops matching the old records instead of
+    serving them;
   * compiled executables are not persistable — non-JSON values are
     silently skipped and live only in the memory tier;
   * concurrency: appends take an ``flock`` around a single ``write`` (the
@@ -28,6 +31,15 @@ architecture at most once per host:
 The store is warm-loaded at construction (study/estimator setup time)
 and refreshed incrementally on miss, so a restarted study starts with
 every previously compiled value already resident.
+
+**Migration note (toolchain salt):** keys written before the salt was
+introduced (records whose ``key`` field is a bare JSON list rather than
+a ``{"key": ..., "toolchain": ...}`` object) are still parsed but can no
+longer match a lookup, so the first run on the new format recomputes and
+appends fresh records — no manual migration is needed.  The same applies
+after any jax/jaxlib upgrade.  The store is append-only, so superseded
+records linger on disk until the directory is deleted (a rebuild is
+cheap: one compile per live architecture).
 """
 from __future__ import annotations
 
@@ -54,12 +66,44 @@ def jsonable(value: Any) -> bool:
     return False
 
 
+def toolchain_versions() -> Dict[str, str]:
+    """jax/jaxlib versions, or "unavailable" when not importable — the
+    compiled-value salt: two toolchains may compile the same program to
+    different latency/memory, so their values must never alias."""
+    try:
+        import jax
+
+        jax_version = str(getattr(jax, "__version__", "unknown"))
+    except Exception:
+        jax_version = "unavailable"
+    try:
+        import jaxlib.version
+
+        jaxlib_version = str(jaxlib.version.__version__)
+    except Exception:
+        jaxlib_version = "unavailable"
+    return {"jax": jax_version, "jaxlib": jaxlib_version}
+
+
+_TOOLCHAIN: Optional[Dict[str, str]] = None
+
+
+def _toolchain_salt() -> Dict[str, str]:
+    global _TOOLCHAIN
+    if _TOOLCHAIN is None:
+        _TOOLCHAIN = toolchain_versions()
+    return _TOOLCHAIN
+
+
 def canonical_key(key: Hashable) -> Optional[str]:
-    """Stable string form of a cache key, or None when the key contains
-    non-JSON parts (those entries stay memory-only)."""
+    """Stable string form of a cache key salted with the jax/jaxlib
+    versions (an XLA upgrade invalidates structurally instead of serving
+    stale compiled values), or None when the key contains non-JSON parts
+    (those entries stay memory-only)."""
     if not jsonable(key):
         return None
-    return json.dumps(key, sort_keys=True, separators=(",", ":"))
+    return json.dumps({"key": key, "toolchain": _toolchain_salt()},
+                      sort_keys=True, separators=(",", ":"))
 
 
 class DiskEvaluationCache:

@@ -24,10 +24,12 @@ import numpy as np
 from repro.core.builder import BuiltModel
 from repro.evaluation.api import Estimator
 from repro.evaluation.cache import EvaluationCache
+from repro.explorer.registry import ESTIMATORS
 from repro.hwgen.generator import HardwareManager, XLAGenerator
 from repro.hwgen.targets import TargetSpec
 
 
+@ESTIMATORS.register("n_params")
 class ParamCountEstimator(Estimator):
     name = "n_params"
 
@@ -35,6 +37,7 @@ class ParamCountEstimator(Estimator):
         return float(candidate.n_params)
 
 
+@ESTIMATORS.register("flops")
 class FlopsEstimator(Estimator):
     name = "flops"
 
@@ -42,6 +45,7 @@ class FlopsEstimator(Estimator):
         return float(candidate.flops)
 
 
+@ESTIMATORS.register("activation_bytes")
 class ActivationMemoryEstimator(Estimator):
     """Analytical activation footprint: max layer output size (batch 1)."""
 
@@ -90,6 +94,7 @@ class _CompiledEstimator(Estimator):
         return artifact, (params, x)
 
 
+@ESTIMATORS.register("latency_s")
 class CompiledLatencyEstimator(_CompiledEstimator):
     """Hardware-in-the-loop latency via the generator pipeline (paper §VI
     mode 2).  Results are cached by full architecture signature.
@@ -107,7 +112,12 @@ class CompiledLatencyEstimator(_CompiledEstimator):
                  cache: Optional[EvaluationCache | str] = None,
                  metric: str = "measured"):
         super().__init__(target, batch=batch, cache=cache)
-        assert metric in ("measured", "modelled"), metric
+        if metric not in ("measured", "modelled"):
+            # a real raise, not an assert: metric is reachable from YAML
+            # experiment specs, and asserts vanish under ``python -O``
+            raise ValueError(
+                f"unknown latency metric {metric!r}; expected 'measured' or 'modelled'"
+            )
         self.manager = manager or HardwareManager()
         self.metric = metric
 
@@ -121,6 +131,7 @@ class CompiledLatencyEstimator(_CompiledEstimator):
         return self.cache.get_or_compute((self.metric,) + self._value_key(candidate), compute)
 
 
+@ESTIMATORS.register("peak_bytes")
 class CompiledMemoryEstimator(_CompiledEstimator):
     name = "peak_bytes"
 
@@ -132,6 +143,7 @@ class CompiledMemoryEstimator(_CompiledEstimator):
         return self.cache.get_or_compute(self._value_key(candidate), compute)
 
 
+@ESTIMATORS.register("val_accuracy")
 class TrainedAccuracyEstimator(Estimator):
     """Short-budget training + validation accuracy (maximize).
 

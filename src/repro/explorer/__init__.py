@@ -1,0 +1,51 @@
+"""Unified Explorer facade: registries + declarative experiments + one
+entry point from search space to deployment report.
+
+Attribute access is lazy (PEP 562): the self-registering modules
+(``repro.search.samplers`` etc.) import ``repro.explorer.registry`` at
+class-definition time, so this package initializer must not eagerly pull
+in :mod:`repro.explorer.explorer` (which imports them back).
+"""
+from __future__ import annotations
+
+import importlib
+
+_EXPORTS = {
+    # registry layer
+    "Registry": "repro.explorer.registry",
+    "ExplorerError": "repro.explorer.registry",
+    "UnknownComponentError": "repro.explorer.registry",
+    "register": "repro.explorer.registry",
+    "SAMPLERS": "repro.explorer.registry",
+    "EXECUTORS": "repro.explorer.registry",
+    "ESTIMATORS": "repro.explorer.registry",
+    "PRUNERS": "repro.explorer.registry",
+    "TARGETS": "repro.explorer.registry",
+    # declarative spec layer
+    "ExperimentSpec": "repro.explorer.experiment",
+    "ExperimentError": "repro.explorer.experiment",
+    "CriterionSpec": "repro.explorer.experiment",
+    "SamplerSpec": "repro.explorer.experiment",
+    "ExecutorSpec": "repro.explorer.experiment",
+    "BudgetSpec": "repro.explorer.experiment",
+    "CacheSpec": "repro.explorer.experiment",
+    "PrunerSpec": "repro.explorer.experiment",
+    # facade layer
+    "Explorer": "repro.explorer.explorer",
+    "ExplorationReport": "repro.explorer.explorer",
+    "SpecObjective": "repro.explorer.explorer",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    try:
+        module = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(f"module 'repro.explorer' has no attribute {name!r}") from None
+    return getattr(importlib.import_module(module), name)
+
+
+def __dir__():
+    return __all__

@@ -1,0 +1,53 @@
+"""Run a YAML experiment from the command line::
+
+    PYTHONPATH=src python -m repro.explorer examples/experiments/quickstart.yaml
+
+Overrides exist for the knobs CI and quick local smoke runs need to
+shrink without editing the experiment file.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.explorer.experiment import ExperimentSpec
+from repro.explorer.explorer import Explorer
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.explorer",
+        description="Run a declarative NAS experiment (YAML) through the Explorer facade.",
+    )
+    p.add_argument("experiment", help="path to the experiment YAML")
+    p.add_argument("--trials", type=int, default=None, help="override budget.n_trials")
+    p.add_argument("--backend", default=None, help="override executor.backend")
+    p.add_argument("--workers", type=int, default=None, help="override executor.n_workers")
+    p.add_argument("--report-dir", default=None, help="override report_dir")
+    args = p.parse_args(argv)
+
+    spec = ExperimentSpec.from_yaml(args.experiment)
+    if args.trials is not None:
+        spec.budget.n_trials = max(1, args.trials)
+    if args.backend is not None:
+        spec.executor.backend = args.backend
+    if args.workers is not None:
+        spec.executor.n_workers = max(1, args.workers)
+    if args.report_dir is not None:
+        spec.report_dir = args.report_dir
+
+    report = Explorer.from_spec(spec).run()
+    best = report.best
+    print(f"experiment {report.experiment!r}: {report.n_trials} trials "
+          f"({report.states}) in {report.wall_clock_s:.1f}s "
+          f"on {report.backend}/{report.n_workers}")
+    if best is not None:
+        print(f"best trial #{best['number']}: values={best['values']} "
+              f"arch={best['signature']}")
+    if report.cache:
+        print(f"cache: {report.cache}")
+    print(f"report: {report.artifact}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,459 @@
+"""Declarative experiment specification: YAML/dict -> :class:`ExperimentSpec`.
+
+One document describes a whole exploration — the paper's "unified"
+interface — instead of hand-wiring six subsystems per script::
+
+    name: quickstart
+    search_space:            # inline DSL mapping, or {file: path.yaml}
+      input: [3, 256]
+      output: 4
+      sequence: [...]
+    sampler: {name: tpe, seed: 0}
+    executor: {backend: process, n_workers: 2}
+    criteria:
+      - {estimator: flops, kind: objective, weight: 1.0}
+      - {estimator: n_params, kind: soft_constraint, limit: 1e6, weight: 0.1}
+      - estimator: latency_s
+        kind: objective
+        params: {batch: 8, metric: modelled}   # estimator constructor kwargs
+    target: host_cpu
+    cache: {dir: results/cache}  # or a bare path; omit for memory-only
+    persistence: results/quickstart.jsonl      # resumable study storage
+    budget: {n_trials: 25, timeout_s: null}
+    pruner: {name: median}                     # optional
+    scalarize: true          # false -> multi-objective (Pareto) search
+    report_dir: results
+
+Component names resolve through :mod:`repro.explorer.registry`, so a
+plugin registered under a new key is immediately addressable from YAML.
+Validation is eager and errors name the offending key plus the accepted
+alternatives — a typo fails at parse time, not trial 37.
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+import os
+from typing import Any, Dict, List, Mapping, Optional
+
+import yaml
+
+from repro.core.space import SpaceError, parse_search_space
+from repro.explorer.registry import (
+    ESTIMATORS,
+    EXECUTORS,
+    PRUNERS,
+    SAMPLERS,
+    TARGETS,
+    ExplorerError,
+)
+
+
+class ExperimentError(ExplorerError):
+    """A spec failed validation (bad key, bad value, unknown component)."""
+
+
+CRITERIA_KINDS = ("objective", "soft_constraint", "hard_constraint")
+DIRECTIONS = ("minimize", "maximize")
+
+
+def _require_mapping(raw: Any, where: str) -> Dict[str, Any]:
+    if not isinstance(raw, Mapping):
+        raise ExperimentError(f"{where} must be a mapping, got {type(raw).__name__}")
+    return dict(raw)
+
+
+def _check_keys(raw: Mapping[str, Any], allowed: Mapping[str, Any] | set, where: str) -> None:
+    unknown = sorted(set(raw) - set(allowed))
+    if unknown:
+        raise ExperimentError(
+            f"unknown key(s) {unknown} in {where}; allowed keys: {sorted(allowed)}"
+        )
+
+
+def _check_component_kwargs(factory: Any, options: Dict[str, Any], where: str) -> None:
+    """Bind ``options`` against the component constructor so a bad kwarg
+    fails at spec-parse time with the constructor's own message."""
+    try:
+        inspect.signature(factory).bind(**options)
+    except TypeError as e:
+        raise ExperimentError(f"{where}: {e}") from None
+
+
+@dataclasses.dataclass
+class SamplerSpec:
+    name: str = "random"
+    options: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @classmethod
+    def from_raw(cls, raw: Any, where: str = "sampler") -> "SamplerSpec":
+        if raw is None:
+            return cls()
+        if isinstance(raw, str):
+            raw = {"name": raw}
+        raw = _require_mapping(raw, where)
+        options = dict(raw)
+        name = options.pop("name", None)
+        if name is None:
+            raise ExperimentError(
+                f"{where}: missing 'name'; registered samplers: {SAMPLERS.names()}"
+            )
+        factory = SAMPLERS.get(name)  # raises UnknownComponentError with alternatives
+        _check_component_kwargs(factory, options, where)
+        return cls(name=str(name), options=options)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"name": self.name, **self.options}
+
+    def build(self):
+        return SAMPLERS.get(self.name)(**self.options)
+
+
+@dataclasses.dataclass
+class PrunerSpec:
+    name: str
+    options: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @classmethod
+    def from_raw(cls, raw: Any, where: str = "pruner") -> Optional["PrunerSpec"]:
+        if raw is None:
+            return None
+        if isinstance(raw, str):
+            raw = {"name": raw}
+        raw = _require_mapping(raw, where)
+        options = dict(raw)
+        name = options.pop("name", None)
+        if name is None:
+            raise ExperimentError(
+                f"{where}: missing 'name'; registered pruners: {PRUNERS.names()}"
+            )
+        factory = PRUNERS.get(name)
+        _check_component_kwargs(factory, options, where)
+        return cls(name=str(name), options=options)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"name": self.name, **self.options}
+
+    def build(self):
+        return PRUNERS.get(self.name)(**self.options)
+
+
+@dataclasses.dataclass
+class ExecutorSpec:
+    backend: str = "serial"
+    n_workers: int = 1
+
+    KEYS = ("backend", "n_workers")
+
+    @classmethod
+    def from_raw(cls, raw: Any, where: str = "executor") -> "ExecutorSpec":
+        if raw is None:
+            return cls()
+        if isinstance(raw, str):
+            raw = {"backend": raw}
+        raw = _require_mapping(raw, where)
+        _check_keys(raw, set(cls.KEYS), where)
+        backend = str(raw.get("backend", "serial"))
+        EXECUTORS.get(backend)
+        n_workers = int(raw.get("n_workers", 1))
+        if n_workers < 1:
+            raise ExperimentError(f"{where}: n_workers must be >= 1, got {n_workers}")
+        return cls(backend=backend, n_workers=n_workers)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"backend": self.backend, "n_workers": self.n_workers}
+
+    def build(self):
+        return EXECUTORS.get(self.backend)()
+
+
+@dataclasses.dataclass
+class CriterionSpec:
+    estimator: str
+    kind: str = "objective"
+    direction: str = "minimize"
+    weight: float = 1.0
+    limit: Optional[float] = None
+    params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    KEYS = ("estimator", "kind", "direction", "weight", "limit", "params")
+
+    @classmethod
+    def from_raw(cls, raw: Any, where: str) -> "CriterionSpec":
+        if isinstance(raw, str):
+            raw = {"estimator": raw}
+        raw = _require_mapping(raw, where)
+        _check_keys(raw, set(cls.KEYS), where)
+        name = raw.get("estimator")
+        if name is None:
+            raise ExperimentError(
+                f"{where}: missing 'estimator'; registered estimators: "
+                f"{ESTIMATORS.names()}"
+            )
+        factory = ESTIMATORS.get(name)
+        kind = str(raw.get("kind", "objective"))
+        if kind not in CRITERIA_KINDS:
+            raise ExperimentError(
+                f"{where}: unknown kind {kind!r}; expected one of {CRITERIA_KINDS}"
+            )
+        direction = str(raw.get("direction", "minimize"))
+        if direction not in DIRECTIONS:
+            raise ExperimentError(
+                f"{where}: unknown direction {direction!r}; expected one of {DIRECTIONS}"
+            )
+        limit = raw.get("limit")
+        if kind != "objective" and limit is None:
+            raise ExperimentError(f"{where}: kind {kind!r} requires a 'limit'")
+        params = _require_mapping(raw.get("params") or {}, f"{where}.params")
+        # target/cache are injected by the Explorer; everything else must
+        # bind against the estimator constructor
+        probe = dict(params)
+        sig_params = inspect.signature(factory).parameters
+        for injected in ("target", "cache"):
+            if injected in sig_params:
+                probe.setdefault(injected, None)
+        _check_component_kwargs(factory, probe, where)
+        return cls(
+            estimator=str(name), kind=kind, direction=direction,
+            weight=float(raw.get("weight", 1.0)),
+            limit=None if limit is None else float(limit),
+            params=params,
+        )
+
+    def to_dict(self) -> Dict[str, Any]:
+        d: Dict[str, Any] = {
+            "estimator": self.estimator, "kind": self.kind,
+            "direction": self.direction, "weight": self.weight,
+        }
+        if self.limit is not None:
+            d["limit"] = self.limit
+        if self.params:
+            d["params"] = dict(self.params)
+        return d
+
+    def build_estimator(self, target: Any = None, cache: Any = None):
+        """Instantiate the estimator, injecting the experiment's hardware
+        target and shared cache wherever the constructor accepts them."""
+        factory = ESTIMATORS.get(self.estimator)
+        kwargs = dict(self.params)
+        sig_params = inspect.signature(factory).parameters
+        if "target" in sig_params and "target" not in kwargs and target is not None:
+            kwargs["target"] = target
+        if "cache" in sig_params and "cache" not in kwargs and cache is not None:
+            kwargs["cache"] = cache
+        return factory(**kwargs)
+
+
+@dataclasses.dataclass
+class CacheSpec:
+    dir: Optional[str] = None  # disk store directory; None = memory-only
+
+    @classmethod
+    def from_raw(cls, raw: Any, where: str = "cache") -> "CacheSpec":
+        if raw is None or raw is False:
+            return cls()
+        if raw is True:
+            from repro.evaluation.disk_cache import DEFAULT_DIR
+
+            return cls(dir=DEFAULT_DIR)
+        if isinstance(raw, (str, os.PathLike)):
+            return cls(dir=str(raw))
+        raw = _require_mapping(raw, where)
+        _check_keys(raw, {"dir"}, where)
+        d = raw.get("dir")
+        return cls(dir=None if d is None else str(d))
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"dir": self.dir}
+
+
+@dataclasses.dataclass
+class BudgetSpec:
+    n_trials: int = 25
+    timeout_s: Optional[float] = None
+
+    KEYS = ("n_trials", "timeout_s")
+
+    @classmethod
+    def from_raw(cls, raw: Any, where: str = "budget") -> "BudgetSpec":
+        if raw is None:
+            return cls()
+        if isinstance(raw, int):
+            raw = {"n_trials": raw}
+        raw = _require_mapping(raw, where)
+        _check_keys(raw, set(cls.KEYS), where)
+        n_trials = int(raw.get("n_trials", 25))
+        if n_trials < 1:
+            raise ExperimentError(f"{where}: n_trials must be >= 1, got {n_trials}")
+        timeout = raw.get("timeout_s")
+        return cls(n_trials=n_trials,
+                   timeout_s=None if timeout is None else float(timeout))
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"n_trials": self.n_trials, "timeout_s": self.timeout_s}
+
+
+TOP_LEVEL_KEYS = (
+    "name", "search_space", "sampler", "executor", "criteria", "target",
+    "cache", "persistence", "budget", "pruner", "scalarize", "report_dir",
+)
+
+
+def _resolve_search_space(raw: Any, base_dir: Optional[str]) -> Dict[str, Any]:
+    """Inline mapping, inline YAML text, or ``{file: path}`` reference
+    (relative paths resolve against the experiment file's directory).
+    Always returns the loaded mapping so the spec is self-contained and
+    picklable regardless of where it came from."""
+    if raw is None:
+        raise ExperimentError(
+            f"missing 'search_space'; provide an inline space mapping or "
+            f"{{file: path.yaml}}"
+        )
+    if isinstance(raw, Mapping) and set(raw) == {"file"}:
+        path = str(raw["file"])
+        if base_dir and not os.path.isabs(path):
+            path = os.path.join(base_dir, path)
+        if not os.path.exists(path):
+            raise ExperimentError(f"search_space file not found: {path!r}")
+        with open(path) as f:
+            raw = yaml.safe_load(f.read())
+    elif isinstance(raw, str):
+        raw = yaml.safe_load(raw)
+    if not isinstance(raw, Mapping):
+        raise ExperimentError(
+            f"search_space must be a mapping (inline DSL or {{file: path}}), "
+            f"got {type(raw).__name__}"
+        )
+    return dict(raw)
+
+
+@dataclasses.dataclass
+class ExperimentSpec:
+    """A fully validated, JSON-serializable experiment description."""
+
+    name: str
+    search_space: Dict[str, Any]
+    criteria: List[CriterionSpec]
+    sampler: SamplerSpec = dataclasses.field(default_factory=SamplerSpec)
+    executor: ExecutorSpec = dataclasses.field(default_factory=ExecutorSpec)
+    target: str = "host_cpu"
+    cache: CacheSpec = dataclasses.field(default_factory=CacheSpec)
+    persistence: Optional[str] = None
+    budget: BudgetSpec = dataclasses.field(default_factory=BudgetSpec)
+    pruner: Optional[PrunerSpec] = None
+    scalarize: bool = True
+    report_dir: str = "results"
+
+    # -- construction ----------------------------------------------------------
+
+    @classmethod
+    def from_dict(cls, raw: Mapping[str, Any],
+                  base_dir: Optional[str] = None) -> "ExperimentSpec":
+        raw = _require_mapping(raw, "experiment")
+        _check_keys(raw, set(TOP_LEVEL_KEYS), "experiment")
+
+        space_dict = _resolve_search_space(raw.get("search_space"), base_dir)
+        try:
+            parse_search_space(dict(space_dict))
+        except SpaceError as e:
+            raise ExperimentError(f"search_space: {e}") from e
+
+        raw_criteria = raw.get("criteria")
+        if not isinstance(raw_criteria, (list, tuple)) or not raw_criteria:
+            raise ExperimentError(
+                "criteria must be a non-empty list of "
+                "{estimator, kind, direction, weight, limit, params} entries"
+            )
+        criteria = [CriterionSpec.from_raw(c, f"criteria[{i}]")
+                    for i, c in enumerate(raw_criteria)]
+        objectives = [c for c in criteria if c.kind == "objective"]
+        if not objectives:
+            raise ExperimentError(
+                "criteria must include at least one kind='objective' entry "
+                "(constraints alone give every candidate the same score)"
+            )
+        names = [c.estimator for c in criteria]
+        dupes = sorted({n for n in names if names.count(n) > 1})
+        if dupes:
+            raise ExperimentError(
+                f"criteria reference estimator(s) {dupes} more than once; "
+                f"scores aggregate by estimator name, so duplicates collide"
+            )
+
+        target = str(raw.get("target", "host_cpu"))
+        TARGETS.get(target)
+
+        scalarize = bool(raw.get("scalarize", True))
+        if not scalarize:
+            soft = [c.estimator for c in criteria if c.kind == "soft_constraint"]
+            if soft:
+                raise ExperimentError(
+                    f"scalarize: false ignores soft constraints (multi-objective "
+                    f"evaluation only runs hard constraints and objectives), but "
+                    f"criteria declare soft_constraint(s) {soft}; use "
+                    f"kind: hard_constraint, promote them to objectives, or keep "
+                    f"scalarize: true"
+                )
+        persistence = raw.get("persistence")
+        return cls(
+            name=str(raw.get("name", "experiment")),
+            search_space=space_dict,
+            criteria=criteria,
+            sampler=SamplerSpec.from_raw(raw.get("sampler")),
+            executor=ExecutorSpec.from_raw(raw.get("executor")),
+            target=target,
+            cache=CacheSpec.from_raw(raw.get("cache")),
+            persistence=None if persistence is None else str(persistence),
+            budget=BudgetSpec.from_raw(raw.get("budget")),
+            pruner=PrunerSpec.from_raw(raw.get("pruner")),
+            scalarize=scalarize,
+            report_dir=str(raw.get("report_dir", "results")),
+        )
+
+    @classmethod
+    def from_yaml(cls, path: str) -> "ExperimentSpec":
+        with open(path) as f:
+            raw = yaml.safe_load(f.read())
+        return cls.from_dict(raw, base_dir=os.path.dirname(os.path.abspath(path)))
+
+    @classmethod
+    def from_yaml_text(cls, text: str, base_dir: Optional[str] = None) -> "ExperimentSpec":
+        return cls.from_dict(yaml.safe_load(text), base_dir=base_dir)
+
+    # -- serialization ---------------------------------------------------------
+
+    def to_dict(self) -> Dict[str, Any]:
+        """JSON-able round-trip form: ``from_dict(spec.to_dict())`` is
+        equivalent to ``spec`` (search-space file refs come back inlined)."""
+        d: Dict[str, Any] = {
+            "name": self.name,
+            "search_space": dict(self.search_space),
+            "sampler": self.sampler.to_dict(),
+            "executor": self.executor.to_dict(),
+            "criteria": [c.to_dict() for c in self.criteria],
+            "target": self.target,
+            "cache": self.cache.to_dict(),
+            "budget": self.budget.to_dict(),
+            "scalarize": self.scalarize,
+            "report_dir": self.report_dir,
+        }
+        if self.persistence is not None:
+            d["persistence"] = self.persistence
+        if self.pruner is not None:
+            d["pruner"] = self.pruner.to_dict()
+        return d
+
+    # -- derived views ---------------------------------------------------------
+
+    @property
+    def objective_criteria(self) -> List[CriterionSpec]:
+        return [c for c in self.criteria if c.kind == "objective"]
+
+    @property
+    def directions(self) -> tuple:
+        """Study directions: the scalarized score always minimizes (the
+        aggregator folds maximize objectives in by sign); multi-objective
+        mode optimizes each objective in its declared direction."""
+        if self.scalarize:
+            return ("minimize",)
+        return tuple(c.direction for c in self.objective_criteria)

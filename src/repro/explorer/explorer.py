@@ -1,0 +1,326 @@
+"""The :class:`Explorer` facade: one entry point from search space to
+deployment report.
+
+Composes exactly what the hand-wired examples build by hand —
+``parse_search_space`` + ``ModelBuilder`` + estimators +
+``CriteriaRunner`` + ``EvaluationCache`` + ``ParallelStudy`` + an
+executor backend — from a declarative
+:class:`~repro.explorer.experiment.ExperimentSpec`::
+
+    from repro import Explorer
+
+    report = Explorer.from_yaml("examples/experiments/quickstart.yaml").run()
+    print(report.best)
+
+The facade is sugar *over* the layered API, not a replacement: every
+subsystem stays independently importable, and ``Explorer`` holds no
+state the layers don't already expose (the composed ``Study`` is
+available as ``.study`` after ``run()``).
+
+Determinism contract: for a fixed sampler seed the facade reproduces the
+hand-wired wiring trial-for-trial on every executor backend (the
+objective, scalarization order, and sampler RNG streams are identical);
+see ``tests/test_explorer.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Dict, List, Optional
+
+from repro.explorer.experiment import ExperimentError, ExperimentSpec
+from repro.explorer.registry import TARGETS
+
+
+def _canonical_spec_key(spec_dict: Dict[str, Any]) -> str:
+    return json.dumps(spec_dict, sort_keys=True, separators=(",", ":"))
+
+
+# Per-process lazy state keyed by the canonical spec: the objective below
+# holds only a JSON dict, so it pickles across the process boundary; each
+# spawn worker re-imports this module and composes its own
+# space/builder/runner, sharing compiled values via the spec's disk cache.
+_PROCESS_STATE: Dict[str, Any] = {}
+
+
+class SpecObjective:
+    """Picklable study objective compiled from an :class:`ExperimentSpec`.
+
+    Rebuilds the evaluation pipeline lazily once per process and per
+    spec.  Each trial records the candidate's full architecture
+    ``signature`` plus a ``worker`` attr (evaluating pid + cumulative
+    cache counters) so the parent can aggregate cache behaviour across
+    worker processes it cannot otherwise observe."""
+
+    def __init__(self, spec_dict: Dict[str, Any]):
+        self.spec_dict = spec_dict
+        self._key = _canonical_spec_key(spec_dict)
+
+    def _state(self):
+        state = _PROCESS_STATE.get(self._key)
+        if state is None:
+            from repro.core.builder import ModelBuilder
+            from repro.core.space import parse_search_space
+            from repro.evaluation import (
+                CriteriaRunner,
+                EvaluationCache,
+                OptimizationCriteria,
+            )
+
+            spec = ExperimentSpec.from_dict(self.spec_dict)
+            space = parse_search_space(dict(spec.search_space))
+            builder = ModelBuilder(space.input_shape, space.output_dim)
+            cache = EvaluationCache(disk=spec.cache.dir)
+            target = TARGETS.get(spec.target)
+            criteria = [
+                OptimizationCriteria(
+                    c.build_estimator(target=target, cache=cache),
+                    kind=c.kind, direction=c.direction,
+                    weight=c.weight, limit=c.limit,
+                )
+                for c in spec.criteria
+            ]
+            runner = CriteriaRunner(criteria, cache=cache)
+            state = _PROCESS_STATE[self._key] = (spec, space, builder, runner, cache)
+        return state
+
+    @property
+    def cache(self):
+        return self._state()[4]
+
+    def build_model(self, trial):
+        """Rebuild the (already sampled) model for ``trial`` — used by
+        :meth:`Explorer.best_model` to hand back the winning network."""
+        from repro.core.translate import sample_architecture
+
+        _, space, builder, _, _ = self._state()
+        return builder.build(sample_architecture(space, trial))
+
+    def __call__(self, trial):
+        from repro.core.translate import sample_architecture
+
+        spec, space, builder, runner, cache = self._state()
+        arch = sample_architecture(space, trial)
+        model = builder.build(arch)
+        trial.set_user_attr("signature", arch.signature())
+        if spec.scalarize:
+            value = runner.evaluate(model, trial=trial)
+        else:
+            value = runner.evaluate_multi(model, trial=trial)
+        trial.set_user_attr("worker", {"pid": os.getpid(), **cache.stats.as_dict()})
+        return value
+
+
+def _aggregate_cache_stats(trials) -> Optional[Dict[str, Any]]:
+    """Sum each worker process's final cumulative cache counters (keyed
+    by pid; counters are monotone, so the elementwise max per pid is that
+    worker's total — same discipline as benchmarks/bench_nas.py)."""
+    per_pid: Dict[int, Dict[str, Any]] = {}
+    counters = ("hits", "disk_hits", "misses")
+    for t in trials:
+        w = t.user_attrs.get("worker")
+        if not isinstance(w, dict) or "pid" not in w:
+            continue
+        cur = per_pid.setdefault(w["pid"], dict.fromkeys(counters, 0))
+        for k in counters:
+            cur[k] = max(cur[k], w.get(k, 0))
+    if not per_pid:
+        return None
+    totals: Dict[str, Any] = {k: sum(c[k] for c in per_pid.values()) for k in counters}
+    lookups = totals["hits"] + totals["disk_hits"] + totals["misses"]
+    totals["hit_rate"] = (totals["hits"] + totals["disk_hits"]) / lookups if lookups else 0.0
+    totals["n_workers_seen"] = len(per_pid)
+    return totals
+
+
+def _dominates(a: List[float], b: List[float], signs: List[float]) -> bool:
+    """True if a is no worse than b on every objective and better on one
+    (after sign-normalizing so every objective minimizes)."""
+    no_worse = all(sa * va <= sa * vb for sa, va, vb in zip(signs, a, b))
+    better = any(sa * va < sa * vb for sa, va, vb in zip(signs, a, b))
+    return no_worse and better
+
+
+def _trial_summary(trial, extra_values: Optional[List[float]] = None) -> Dict[str, Any]:
+    return {
+        "number": trial.number,
+        "values": list(trial.values) if trial.values else None,
+        "objective_values": extra_values,
+        "params": dict(trial.params),
+        "signature": trial.user_attrs.get("signature"),
+    }
+
+
+@dataclasses.dataclass
+class ExplorationReport:
+    """What an exploration produced, JSON-serializable end to end."""
+
+    experiment: str
+    sampler: str
+    backend: str
+    n_workers: int
+    directions: List[str]
+    n_trials: int
+    states: Dict[str, int]
+    best: Optional[Dict[str, Any]]
+    criteria_values: Dict[str, float]
+    pareto_front: List[Dict[str, Any]]
+    cache: Optional[Dict[str, Any]]
+    wall_clock_s: float
+    toolchain: Dict[str, str]
+    artifact: Optional[str] = None
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    def to_json(self, indent: int = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    def save(self, path: str) -> str:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        self.artifact = path  # before serializing, so the JSON self-locates
+        with open(path, "w") as f:
+            f.write(self.to_json() + "\n")
+        return path
+
+
+class Explorer:
+    """Single front door: ``Explorer.from_yaml(path).run()``."""
+
+    def __init__(self, spec: ExperimentSpec):
+        self.spec = spec
+        self.study = None  # composed ParallelStudy, available after run()
+        self._objective: Optional[SpecObjective] = None
+
+    # -- constructors ----------------------------------------------------------
+
+    @classmethod
+    def from_yaml(cls, path: str) -> "Explorer":
+        return cls(ExperimentSpec.from_yaml(path))
+
+    @classmethod
+    def from_spec(cls, spec: ExperimentSpec) -> "Explorer":
+        if not isinstance(spec, ExperimentSpec):
+            raise ExperimentError(
+                f"from_spec expects an ExperimentSpec, got {type(spec).__name__} "
+                f"(use from_dict for raw mappings)"
+            )
+        return cls(spec)
+
+    @classmethod
+    def from_dict(cls, raw: Dict[str, Any]) -> "Explorer":
+        return cls(ExperimentSpec.from_dict(raw))
+
+    # -- run -------------------------------------------------------------------
+
+    def run(self, save_report: bool = True) -> ExplorationReport:
+        """Execute the experiment and return (and, by default, persist
+        under ``<report_dir>/``) an :class:`ExplorationReport`."""
+        from repro.search.parallel import ParallelStudy
+
+        spec = self.spec
+        study = ParallelStudy(
+            name=spec.name,
+            sampler=spec.sampler.build(),
+            pruner=spec.pruner.build() if spec.pruner else None,
+            directions=spec.directions,
+            storage=spec.persistence,
+            n_workers=spec.executor.n_workers,
+            backend=spec.executor.build(),
+        )
+        self.study = study
+        self._objective = objective = SpecObjective(spec.to_dict())
+
+        n_workers = spec.executor.n_workers
+        timeout = spec.budget.timeout_s
+        # persistence resume: already-stored trials count against the budget
+        remaining = spec.budget.n_trials - len(study.trials)
+        t0 = time.perf_counter()
+        while remaining > 0:
+            # without a timeout run the whole budget in one optimize() call
+            # (one executor start/shutdown); with one, chunk so the deadline
+            # is checked between batches — granularity is one chunk
+            chunk = remaining if timeout is None else min(remaining, max(1, n_workers) * 2)
+            study.optimize(objective, chunk, n_workers=n_workers)
+            remaining -= chunk
+            if timeout is not None and time.perf_counter() - t0 >= timeout:
+                break
+        wall_clock = time.perf_counter() - t0
+
+        report = self._build_report(wall_clock)
+        if save_report:
+            report.save(os.path.join(spec.report_dir, f"{spec.name}.report.json"))
+        return report
+
+    # -- post-run accessors ----------------------------------------------------
+
+    def best_model(self):
+        """Rebuild the winning architecture as an executable BuiltModel."""
+        if self.study is None or self._objective is None:
+            raise ExperimentError("best_model() requires a completed run()")
+        best = self.study.best_trial
+        if best is None:
+            raise ExperimentError("no completed trials — nothing to rebuild")
+        return self._objective.build_model(best)
+
+    # -- report assembly -------------------------------------------------------
+
+    def _pareto(self) -> List[Dict[str, Any]]:
+        """Non-dominated completed trials over the objective criteria.
+        In multi-objective mode the study's own Pareto set is used; in
+        scalarized mode the front is recovered from the per-criterion
+        values every trial records as user attrs (so even a weighted-sum
+        search reports the trade-off surface it explored)."""
+        spec, study = self.spec, self.study
+        objectives = spec.objective_criteria
+        if not spec.scalarize:
+            return [_trial_summary(t, list(t.values)) for t in study.best_trials]
+        if len(objectives) < 2:
+            return []
+        names = [c.estimator for c in objectives]
+        signs = [1.0 if c.direction == "minimize" else -1.0 for c in objectives]
+        # estimator user attrs are recorded under the *estimator instance*
+        # name, which matches the registry key for the built-ins
+        pts = [
+            (t, [float(t.user_attrs[n]) for n in names])
+            for t in study.completed_trials
+            if all(n in t.user_attrs for n in names)
+        ]
+        front = [
+            (t, vals) for t, vals in pts
+            if not any(_dominates(other, vals, signs) for _, other in pts)
+        ]
+        return [_trial_summary(t, vals) for t, vals in front]
+
+    def _build_report(self, wall_clock: float) -> ExplorationReport:
+        from repro.evaluation.disk_cache import toolchain_versions
+
+        spec, study = self.spec, self.study
+        states: Dict[str, int] = {}
+        for t in study.trials:
+            states[t.state.value] = states.get(t.state.value, 0) + 1
+        best = study.best_trial
+        criterion_names = [c.estimator for c in spec.criteria]
+        criteria_values = {}
+        if best is not None:
+            criteria_values = {
+                n: float(best.user_attrs[n])
+                for n in criterion_names if n in best.user_attrs
+            }
+        return ExplorationReport(
+            experiment=spec.name,
+            sampler=spec.sampler.name,
+            backend=spec.executor.backend,
+            n_workers=spec.executor.n_workers,
+            directions=list(spec.directions),
+            n_trials=len(study.trials),
+            states=states,
+            best=_trial_summary(best) if best is not None else None,
+            criteria_values=criteria_values,
+            pareto_front=self._pareto(),
+            cache=_aggregate_cache_stats(study.trials),
+            wall_clock_s=wall_clock,
+            toolchain=toolchain_versions(),
+        )

@@ -88,3 +88,13 @@ def get_target(name: str) -> TargetSpec:
     if name not in TARGETS:
         raise KeyError(f"unknown target {name!r}; available: {sorted(TARGETS)}")
     return TARGETS[name]
+
+
+# Publish the built-in targets to the Explorer facade's registry so YAML
+# experiments can name them; plugin targets register the same way
+# (``register("target", "my_board", spec)``) without touching this dict.
+from repro.explorer.registry import TARGETS as _EXPLORER_TARGETS  # noqa: E402
+
+for _name, _spec in TARGETS.items():
+    _EXPLORER_TARGETS.register(_name, _spec)
+del _name, _spec

@@ -35,6 +35,7 @@ import traceback
 from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
 from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
+from repro.explorer.registry import EXECUTORS
 from repro.search.detached import DetachedSampler, DetachedTrial
 from repro.search.study import evaluate_trial
 from repro.search.trial import Distribution, Trial, TrialState
@@ -126,6 +127,7 @@ class BaseExecutor:
         raise NotImplementedError
 
 
+@EXECUTORS.register("serial")
 class SerialExecutor(BaseExecutor):
     name = "serial"
 
@@ -139,6 +141,7 @@ class SerialExecutor(BaseExecutor):
         return out
 
 
+@EXECUTORS.register("thread")
 class ThreadExecutor(BaseExecutor):
     name = "thread"
 
@@ -165,6 +168,7 @@ class ThreadExecutor(BaseExecutor):
         return out
 
 
+@EXECUTORS.register("process")
 class ProcessExecutor(BaseExecutor):
     """Evaluate trials in worker processes (default start method: spawn —
     forking a process that already initialized XLA's thread pools is not
@@ -232,21 +236,10 @@ class ProcessExecutor(BaseExecutor):
         return out
 
 
-_BACKENDS = {
-    "serial": SerialExecutor,
-    "thread": ThreadExecutor,
-    "process": ProcessExecutor,
-}
-
-
 def make_executor(backend: Union[str, BaseExecutor]) -> BaseExecutor:
-    """Resolve a backend name ("serial" | "thread" | "process") or pass an
-    executor instance through."""
+    """Resolve a backend name through the executor registry ("serial" |
+    "thread" | "process" | any plugin key) or pass an instance through.
+    Unknown names raise a ValueError listing the registered backends."""
     if isinstance(backend, BaseExecutor):
         return backend
-    try:
-        return _BACKENDS[backend]()
-    except KeyError:
-        raise ValueError(
-            f"unknown executor backend {backend!r}; expected one of {sorted(_BACKENDS)}"
-        ) from None
+    return EXECUTORS.get(backend)()

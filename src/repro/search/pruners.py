@@ -4,9 +4,11 @@ from __future__ import annotations
 import math
 from typing import Optional
 
+from repro.explorer.registry import PRUNERS
 from repro.search.trial import TrialState
 
 
+@PRUNERS.register("median")
 class MedianPruner:
     def __init__(self, n_startup_trials: int = 4, n_warmup_steps: int = 0):
         self.n_startup_trials = n_startup_trials
@@ -32,6 +34,8 @@ class MedianPruner:
         return sign * trial.intermediate[step] > median
 
 
+@PRUNERS.register("asha")
+@PRUNERS.register("successive_halving")
 class SuccessiveHalvingPruner:
     """ASHA: rungs at ``min_resource * reduction_factor**k``; a trial is
     pruned at a rung unless it is in the top ``1/reduction_factor`` of all

@@ -13,6 +13,7 @@ from __future__ import annotations
 import random
 from typing import Any, Dict, List, Optional, Tuple
 
+from repro.explorer.registry import SAMPLERS
 from repro.search.detached import (
     DetachedEvolution,
     DetachedGrid,
@@ -60,11 +61,13 @@ class BaseSampler:
         return DetachedSampler(self._base_seed)
 
 
+@SAMPLERS.register("random")
 class RandomSampler(BaseSampler):
     def sample(self, study, trial, name, dist):
         return dist.random(self.trial_rng(trial))
 
 
+@SAMPLERS.register("grid")
 class GridSampler(BaseSampler):
     """Exhaustive sweep over categorical/int grids (continuous -> random)."""
 
@@ -80,6 +83,7 @@ class GridSampler(BaseSampler):
         return DetachedGrid(self._base_seed, study.distribution_registry)
 
 
+@SAMPLERS.register("tpe")
 class TPESampler(BaseSampler):
     """Tree-structured Parzen Estimator (lite).
 
@@ -128,6 +132,7 @@ class TPESampler(BaseSampler):
                            self.n_candidates, self.n_startup, self._sign(study))
 
 
+@SAMPLERS.register("evolution")
 class RegularizedEvolutionSampler(BaseSampler):
     """Regularized evolution (Real et al., 2019): tournament-select a parent
     from a sliding population, mutate one parameter."""
@@ -181,6 +186,7 @@ def pareto_front(trials, directions) -> List[Trial]:
     return front
 
 
+@SAMPLERS.register("nsga2")
 class NSGA2Sampler(BaseSampler):
     """Multi-objective evolutionary sampler: nondominated-rank + crowding
     tournament selection, uniform crossover, per-param mutation."""

@@ -192,7 +192,9 @@ def test_make_executor_resolves_names_and_instances():
     assert isinstance(make_executor("process"), ProcessExecutor)
     ex = ThreadExecutor()
     assert make_executor(ex) is ex
-    with pytest.raises(ValueError, match="unknown executor backend"):
+    # resolution now goes through the explorer registry: the error lists
+    # every registered backend, including plugins
+    with pytest.raises(ValueError, match="unknown executor.*serial"):
         make_executor("gpu-cluster")
 
 
