@@ -28,11 +28,14 @@ from repro.evaluation import (
 )
 from repro.search import (
     GridSampler,
+    MedianPruner,
     ParallelStudy,
     RandomSampler,
     RegularizedEvolutionSampler,
     Study,
     TPESampler,
+    TrialPruned,
+    TrialState,
 )
 from repro.hwgen.generator import HardwareManager, XLAGenerator
 
@@ -543,6 +546,113 @@ def bench_explorer_facade() -> None:
          f"best_match={best_match}")
 
 
+# ---------------------------------------------------------------------------
+# async scheduler group: sliding window vs batch barrier on a
+# latency-skewed objective (the regime hardware-in-the-loop NAS lives in)
+# ---------------------------------------------------------------------------
+
+ASYNC_SEED = 7
+
+
+class LognormalSkewObjective:
+    """Synthetic latency-skew objective: a deterministic lognormal
+    per-trial evaluation cost (sleep, seeded by trial number — identical
+    across schedulers and backends) plus an analytic quality surface, so
+    fixed-seed best trials must agree between schedulers.  Lognormal
+    skew models real compile+benchmark latency: most candidates are
+    cheap, a heavy tail stalls whole batches behind one straggler."""
+
+    def __init__(self, median_s: float = 0.05, sigma: float = 1.2):
+        self.median_s = median_s
+        self.sigma = sigma
+
+    def __call__(self, trial):
+        import math as _math
+        import random as _random
+
+        x = trial.suggest_float("x", 0.0, 1.0)
+        width = trial.suggest_int("width", 16, 128, step=16)
+        rng = _random.Random(f"async-cost/{trial.number}")
+        time.sleep(self.median_s * _math.exp(self.sigma * rng.gauss(0.0, 1.0)))
+        return (x - 0.7) ** 2 + abs(width - 64) / 640.0
+
+
+PRUNE_BUDGET_STEPS = 12
+
+
+def worker_prune_objective(trial):
+    """Picklable stepped objective for the worker-side pruning demo:
+    every fourth trial is obviously doomed (a minority, so the peer
+    median stays at the good level); a worker consulting its shipped
+    pruner snapshot should abandon them after a fraction of the step
+    budget."""
+    bad = trial.number % 4 == 3
+    base = 100.0 if bad else 1.0
+    steps = 0
+    for step in range(PRUNE_BUDGET_STEPS):
+        trial.report(step, base + 0.01 * step)
+        steps += 1
+        if trial.should_prune():
+            trial.set_user_attr("steps_run", steps)
+            raise TrialPruned()
+        time.sleep(0.01)
+    trial.set_user_attr("steps_run", steps)
+    return base
+
+
+def bench_async_scheduler(quick: bool = False) -> None:
+    """Sliding-window vs batch scheduling at n_workers=4 on the
+    lognormal latency-skew objective (thread backend: the objective
+    sleeps, so threads are the realistic backend), plus best-trial
+    parity on Random AND Grid, plus worker-side pruning on the process
+    backend.  All runs share one process — the objective compiles
+    nothing, so there is no warm-state bias between configurations."""
+    trials = 16 if quick else 48
+    median_s = 0.02 if quick else 0.05
+    workers = 4
+
+    def run(schedule, make_sampler):
+        study = ParallelStudy(sampler=make_sampler(), n_workers=workers,
+                              backend="thread", schedule=schedule,
+                              tell_order="completion")
+        t0 = time.perf_counter()
+        study.optimize(LognormalSkewObjective(median_s=median_s), trials)
+        return time.perf_counter() - t0, study.best_trial
+
+    t_batch, best_batch = run("batch", lambda: RandomSampler(seed=ASYNC_SEED))
+    t_slide, best_slide = run("sliding_window", lambda: RandomSampler(seed=ASYNC_SEED))
+    best_match = (best_batch.number == best_slide.number
+                  and best_batch.values == best_slide.values)
+    emit("async/batch", t_batch / trials, f"wall_s={t_batch:.2f}")
+    emit("async/sliding", t_slide / trials,
+         f"speedup_vs_batch={t_batch / t_slide:.2f}x;wall_s={t_slide:.2f};"
+         f"best_match={best_match}")
+
+    gt_batch, g_batch = run("batch", lambda: GridSampler(seed=ASYNC_SEED))
+    gt_slide, g_slide = run("sliding_window", lambda: GridSampler(seed=ASYNC_SEED))
+    grid_match = (g_batch.number == g_slide.number
+                  and g_batch.values == g_slide.values)
+    emit("async/grid_parity", (gt_batch + gt_slide) / (2 * trials),
+         f"speedup_vs_batch={gt_batch / gt_slide:.2f}x;best_match={grid_match}")
+
+    # worker-side pruning: process backend + median pruner — doomed
+    # trials must stop inside the worker, well short of the step budget
+    n_prune = 10 if quick else 16
+    study = ParallelStudy(sampler=RandomSampler(seed=ASYNC_SEED), n_workers=2,
+                          backend="process", schedule="sliding_window",
+                          tell_order="completion",
+                          pruner=MedianPruner(n_startup_trials=2))
+    t0 = time.perf_counter()
+    study.optimize(worker_prune_objective, n_prune)
+    dt = time.perf_counter() - t0
+    pruned = [t for t in study.trials if t.state == TrialState.PRUNED]
+    steps = [t.user_attrs["steps_run"] for t in pruned if "steps_run" in t.user_attrs]
+    mean_steps = sum(steps) / len(steps) if steps else float("nan")
+    emit("async/worker_prune", dt / n_prune,
+         f"pruned={len(pruned)}/{n_prune};budget_steps={PRUNE_BUDGET_STEPS};"
+         f"mean_steps_when_pruned={mean_steps:.1f}")
+
+
 def main() -> None:
     bench_samplers()
     bench_builder_throughput()
@@ -550,6 +660,7 @@ def main() -> None:
     bench_hil_pipeline()
     bench_preprocessing_joint()
     bench_explorer_facade()
+    bench_async_scheduler()
     bench_parallel_engine()
     bench_process_engine()
 
@@ -564,5 +675,9 @@ if __name__ == "__main__":
 
         print(json.dumps(run_parallel_config(
             sys.argv[2], sys.argv[3] if len(sys.argv) == 4 else None)))
+    elif "--quick" in sys.argv[1:]:
+        # CI mode: just the async scheduler group, small sizes, so
+        # scheduler perf regressions surface in every PR log
+        bench_async_scheduler(quick=True)
     else:
         main()

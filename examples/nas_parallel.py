@@ -85,6 +85,10 @@ def make_spec(args, tag: str, backend: str, n_workers: int,
         "search_space": yaml.safe_load(TINY_SPACE_YAML if args.tiny else SPACE_YAML),
         "sampler": {"name": "random", "seed": args.seed if seed is None else seed},
         "executor": {"backend": backend, "n_workers": n_workers},
+        # sliding_window streams tells as evaluations finish (no batch
+        # barrier); with the random sampler "auto" picks it anyway — the
+        # flag exists so --schedule batch can reproduce the old behavior
+        "schedule": {"mode": args.schedule, "tell_order": "completion"},
         # hard memory budget -> latency objective; the shared cache means
         # the two compiled estimators generate ONE artifact per candidate
         "criteria": [
@@ -112,6 +116,10 @@ def main():
                    help="disk-persistent value store (e.g. results/cache); "
                         "re-runs and process workers then skip every compile "
                         "the host already paid for")
+    p.add_argument("--schedule", choices=("auto", "batch", "sliding_window"),
+                   default="auto",
+                   help="trial scheduler: sliding_window streams asks/tells "
+                        "as slots free; batch re-creates the legacy barrier")
     p.add_argument("--tiny", action="store_true",
                    help="use the compact smoke-test search space")
     args = p.parse_args()

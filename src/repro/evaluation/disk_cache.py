@@ -37,20 +37,58 @@ introduced (records whose ``key`` field is a bare JSON list rather than
 a ``{"key": ..., "toolchain": ...}`` object) are still parsed but can no
 longer match a lookup, so the first run on the new format recomputes and
 appends fresh records — no manual migration is needed.  The same applies
-after any jax/jaxlib upgrade.  The store is append-only, so superseded
-records linger on disk until the directory is deleted (a rebuild is
-cheap: one compile per live architecture).
+after any jax/jaxlib upgrade.
+
+**Compaction (size hygiene at scale):** the store is append-only, so
+superseded-toolchain records and evicted duplicates accumulate.  When
+the file holds more than ``REPRO_CACHE_MAX_ENTRIES`` records (or the
+``max_entries`` constructor argument; unset = unbounded), the next
+append rewrites ``entries.jsonl`` in place under the same ``flock`` the
+appends take: records whose toolchain salt no longer matches the running
+jax/jaxlib are dropped first, then least-recently-used current-salt
+records down to ~75% of the cap — the slack means a steady stream of
+new keys doesn't rewrite the file on every append (recency = this
+process's lookup/store order; records only ever seen in the file rank
+oldest, in file order).
+Sibling processes notice the shrink through the existing
+truncation-detection path and re-read.  Dropping a live record only
+costs a recompute — the store is a cache, never the source of truth.
 """
 from __future__ import annotations
 
 import json
 import os
 import threading
-from typing import Any, Dict, Hashable, Optional, Tuple
+import warnings
+from typing import Any, Dict, Hashable, List, Optional, Tuple
+
+try:
+    import fcntl
+except ImportError:  # pragma: no cover — non-POSIX hosts
+    fcntl = None
 
 from repro.ioutils import locked_append
 
 DEFAULT_DIR = os.path.join("results", "cache")
+
+MAX_ENTRIES_ENV = "REPRO_CACHE_MAX_ENTRIES"
+
+
+def _max_entries_from_env() -> Optional[int]:
+    raw = os.environ.get(MAX_ENTRIES_ENV)
+    if raw is None or not raw.strip():
+        return None
+    try:
+        value = int(raw)
+        if value < 1:
+            raise ValueError(raw)
+    except ValueError:
+        warnings.warn(
+            f"ignoring malformed {MAX_ENTRIES_ENV}={raw!r} "
+            f"(expected a positive integer); cache stays unbounded",
+            RuntimeWarning, stacklevel=3)
+        return None
+    return value
 
 _JSON_SCALARS = (str, int, float, bool, type(None))
 
@@ -107,16 +145,29 @@ def canonical_key(key: Hashable) -> Optional[str]:
 
 
 class DiskEvaluationCache:
-    """Append-only JSONL value store, safe across threads and processes."""
+    """Append-only JSONL value store, safe across threads and processes,
+    with optional size-capped LRU compaction (see module docstring)."""
 
     FILENAME = "entries.jsonl"
+    EPOCH_FILENAME = "compaction.epoch"
 
-    def __init__(self, path: str = DEFAULT_DIR):
+    def __init__(self, path: str = DEFAULT_DIR, max_entries: Optional[int] = None):
         self.path = str(path)
         self._file = os.path.join(self.path, self.FILENAME)
+        self._epoch_file = os.path.join(self.path, self.EPOCH_FILENAME)
+        self._epoch: Optional[str] = None  # last-seen compaction token
         self._lock = threading.Lock()
+        # insertion order doubles as recency: lookup hits and stores
+        # re-insert their key at the end, so iteration runs LRU-first
         self._mem: Dict[str, Any] = {}
         self._offset = 0  # byte offset of the next unread record
+        self._file_records = 0  # records this process believes are on disk
+        self.max_entries = max_entries if max_entries is not None else _max_entries_from_env()
+        if self.max_entries is not None:
+            self.max_entries = max(1, int(self.max_entries))
+        self.compactions = 0
+        self.dropped_superseded = 0
+        self.dropped_lru = 0
         os.makedirs(self.path, exist_ok=True)
         self.refresh()  # warm load at construction
 
@@ -128,9 +179,25 @@ class DiskEvaluationCache:
         with self._lock:
             return self._read_new()
 
+    def _read_epoch(self) -> Optional[str]:
+        try:
+            with open(self._epoch_file) as f:
+                return f.read()
+        except OSError:
+            return None
+
     def _read_new(self) -> int:
         if not os.path.exists(self._file):
             return 0
+        epoch = self._read_epoch()
+        if epoch != self._epoch:
+            # a sibling compacted the store: our byte offset no longer
+            # aligns with record boundaries (the rewrite may even leave
+            # the file the same length) — drop the view and re-read
+            self._epoch = epoch
+            self._mem.clear()
+            self._offset = 0
+            self._file_records = 0
         if os.path.getsize(self._file) < self._offset:
             # the store was truncated (a sibling's clear()): our offset
             # points past EOF and our memory view predates the wipe —
@@ -141,6 +208,7 @@ class DiskEvaluationCache:
             # guaranteed rebuild.)
             self._mem.clear()
             self._offset = 0
+            self._file_records = 0
         with open(self._file, "rb") as f:
             f.seek(self._offset)
             data = f.read()
@@ -152,12 +220,15 @@ class DiskEvaluationCache:
         for raw in lines[:-1]:
             if not raw.strip():
                 continue
+            self._file_records += 1
             try:
                 rec = json.loads(raw.decode("utf-8"))
             except (UnicodeDecodeError, json.JSONDecodeError):
                 continue  # corrupt line: skip rather than poison the run
             key = rec.get("key")
             if isinstance(key, str) and "value" in rec:
+                # re-insert so a key re-appended by a sibling ranks recent
+                self._mem.pop(key, None)
                 self._mem[key] = rec["value"]
                 n += 1
         return n
@@ -174,7 +245,9 @@ class DiskEvaluationCache:
         with self._lock:
             self._read_new()
             if ck in self._mem:
-                return True, self._mem[ck]
+                value = self._mem.pop(ck)  # re-insert: hits rank recent
+                self._mem[ck] = value
+                return True, value
         return False, None
 
     # -- writing ---------------------------------------------------------------
@@ -187,11 +260,106 @@ class DiskEvaluationCache:
             return False
         with self._lock:
             if ck in self._mem:  # already persisted (possibly by a sibling)
+                self._mem.pop(ck)
                 self._mem[ck] = value
                 return True
             locked_append(self._file, json.dumps({"key": ck, "value": value}) + "\n")
             self._mem[ck] = value
+            # consume the tail (our own append + anything siblings added)
+            # instead of bumping a counter: the next _read_new would
+            # re-read our record from the old offset and double-count it
+            self._read_new()
+            if self.max_entries is not None and self._file_records > self.max_entries:
+                self._compact()
         return True
+
+    # -- compaction ------------------------------------------------------------
+
+    def _compact(self) -> None:
+        """Rewrite ``entries.jsonl`` in place under flock, dropping
+        superseded-toolchain records first, then LRU current-salt records
+        down to ~75% of ``max_entries`` (headroom so the next appends
+        don't immediately re-trigger).  Caller holds ``self._lock``."""
+        try:
+            f = open(self._file, "r+b")
+        except OSError:
+            return  # store vanished under us: nothing to compact
+        with f:
+            if fcntl is not None:
+                fcntl.flock(f.fileno(), fcntl.LOCK_EX)
+            try:
+                # re-read the WHOLE file under the lock: siblings may have
+                # appended records this process has never seen, and the
+                # cap applies to the union
+                entries: Dict[str, Any] = {}
+                for raw in f.read().split(b"\n"):
+                    if not raw.strip():
+                        continue
+                    try:
+                        rec = json.loads(raw.decode("utf-8"))
+                    except (UnicodeDecodeError, json.JSONDecodeError):
+                        continue  # corrupt line: compacted away
+                    key = rec.get("key")
+                    if isinstance(key, str) and "value" in rec:
+                        entries.pop(key, None)  # keep-last, ranked by file order
+                        entries[key] = rec["value"]
+                current = _toolchain_salt()
+                live: Dict[str, Any] = {}
+                for key, value in entries.items():
+                    try:
+                        salt = json.loads(key).get("toolchain")
+                    except (ValueError, AttributeError):
+                        salt = None  # pre-salt legacy key: superseded
+                    if salt == current:
+                        live[key] = value
+                superseded = len(entries) - len(live)
+                # promote this process's access order (oldest..newest), so
+                # iteration order over `live` is LRU-first; keys only ever
+                # seen in the file keep file order and rank oldest
+                for key in list(self._mem):
+                    if key in live:
+                        live[key] = live.pop(key)
+                # hysteresis: compact down to ~75% of the cap, so a
+                # steady state of all-new keys doesn't rewrite the whole
+                # file on every single append past the cap
+                keep = max(1, self.max_entries - self.max_entries // 4)
+                lru = max(0, len(live) - keep)
+                for key in list(live)[:lru]:
+                    del live[key]
+                f.seek(0)
+                f.truncate()
+                for key, value in live.items():
+                    f.write((json.dumps({"key": key, "value": value}) + "\n")
+                            .encode("utf-8"))
+                f.flush()
+                os.fsync(f.fileno())
+                end = f.tell()
+                # bump the epoch (still under the store flock) so sibling
+                # processes drop their now-misaligned byte offsets
+                epoch = f"{os.getpid()}:{os.urandom(8).hex()}"
+                with open(self._epoch_file, "w") as ef:
+                    ef.write(epoch)
+                self._epoch = epoch
+            finally:
+                if fcntl is not None:
+                    fcntl.flock(f.fileno(), fcntl.LOCK_UN)
+        self._mem = dict(live)
+        self._offset = end
+        self._file_records = len(live)
+        self.compactions += 1
+        self.dropped_superseded += superseded
+        self.dropped_lru += lru
+
+    def stats(self) -> Dict[str, int]:
+        """Hygiene counters for reports: resident entries + what
+        compaction has dropped so far in this process."""
+        with self._lock:
+            return {
+                "disk_entries": len(self._mem),
+                "compactions": self.compactions,
+                "dropped_superseded": self.dropped_superseded,
+                "dropped_lru": self.dropped_lru,
+            }
 
     def clear(self) -> None:
         """Drop every persisted entry (truncates the store file)."""
@@ -200,6 +368,7 @@ class DiskEvaluationCache:
                 pass
             self._mem.clear()
             self._offset = 0
+            self._file_records = 0
 
     def __len__(self) -> int:
         with self._lock:

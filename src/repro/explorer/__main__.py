@@ -22,6 +22,11 @@ def main(argv=None) -> int:
     p.add_argument("--trials", type=int, default=None, help="override budget.n_trials")
     p.add_argument("--backend", default=None, help="override executor.backend")
     p.add_argument("--workers", type=int, default=None, help="override executor.n_workers")
+    p.add_argument("--schedule", default=None,
+                   choices=("auto", "batch", "sliding_window"),
+                   help="override schedule.mode")
+    p.add_argument("--tell-order", default=None, choices=("trial", "completion"),
+                   help="override schedule.tell_order")
     p.add_argument("--report-dir", default=None, help="override report_dir")
     args = p.parse_args(argv)
 
@@ -32,6 +37,10 @@ def main(argv=None) -> int:
         spec.executor.backend = args.backend
     if args.workers is not None:
         spec.executor.n_workers = max(1, args.workers)
+    if args.schedule is not None:
+        spec.schedule.mode = args.schedule
+    if args.tell_order is not None:
+        spec.schedule.tell_order = args.tell_order
     if args.report_dir is not None:
         spec.report_dir = args.report_dir
 
@@ -39,7 +48,8 @@ def main(argv=None) -> int:
     best = report.best
     print(f"experiment {report.experiment!r}: {report.n_trials} trials "
           f"({report.states}) in {report.wall_clock_s:.1f}s "
-          f"on {report.backend}/{report.n_workers}")
+          f"on {report.backend}/{report.n_workers} "
+          f"(schedule={report.schedule['mode']})")
     if best is not None:
         print(f"best trial #{best['number']}: values={best['values']} "
               f"arch={best['signature']}")

@@ -10,6 +10,7 @@ interface — instead of hand-wiring six subsystems per script::
       sequence: [...]
     sampler: {name: tpe, seed: 0}
     executor: {backend: process, n_workers: 2}
+    schedule: {mode: auto, tell_order: trial}    # or sliding_window / batch
     criteria:
       - {estimator: flops, kind: objective, weight: 1.0}
       - {estimator: n_params, kind: soft_constraint, limit: 1e6, weight: 0.1}
@@ -168,6 +169,56 @@ class ExecutorSpec:
 
 
 @dataclasses.dataclass
+class ScheduleSpec:
+    """How ``ParallelStudy`` schedules trials: ``mode`` is ``auto``
+    (sliding window for order-independent samplers, batch otherwise),
+    ``batch``, or ``sliding_window``; ``tell_order`` is ``trial``
+    (reorder buffer, deterministic storage order) or ``completion``
+    (fastest, run-dependent storage order); ``window`` bounds in-flight
+    submissions (default: n_workers)."""
+
+    mode: str = "auto"
+    tell_order: str = "trial"
+    window: Optional[int] = None
+
+    KEYS = ("mode", "tell_order", "window")
+    MODES = ("auto", "batch", "sliding_window")
+    TELL_ORDERS = ("trial", "completion")
+
+    @classmethod
+    def from_raw(cls, raw: Any, where: str = "schedule") -> "ScheduleSpec":
+        if raw is None:
+            return cls()
+        if isinstance(raw, str):
+            raw = {"mode": raw}
+        raw = _require_mapping(raw, where)
+        _check_keys(raw, set(cls.KEYS), where)
+        mode = str(raw.get("mode", "auto"))
+        if mode not in cls.MODES:
+            raise ExperimentError(
+                f"{where}: unknown mode {mode!r}; expected one of {cls.MODES}")
+        tell_order = str(raw.get("tell_order", "trial"))
+        if tell_order not in cls.TELL_ORDERS:
+            raise ExperimentError(
+                f"{where}: unknown tell_order {tell_order!r}; expected one of "
+                f"{cls.TELL_ORDERS}")
+        window = raw.get("window")
+        if window is not None:
+            try:
+                window = int(window)
+            except (TypeError, ValueError):
+                raise ExperimentError(
+                    f"{where}: window must be an integer, got {window!r}") from None
+            if window < 1:
+                raise ExperimentError(f"{where}: window must be >= 1, got {window}")
+        return cls(mode=mode, tell_order=tell_order, window=window)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"mode": self.mode, "tell_order": self.tell_order,
+                "window": self.window}
+
+
+@dataclasses.dataclass
 class CriterionSpec:
     estimator: str
     kind: str = "objective"
@@ -294,8 +345,9 @@ class BudgetSpec:
 
 
 TOP_LEVEL_KEYS = (
-    "name", "search_space", "sampler", "executor", "criteria", "target",
-    "cache", "persistence", "budget", "pruner", "scalarize", "report_dir",
+    "name", "search_space", "sampler", "executor", "schedule", "criteria",
+    "target", "cache", "persistence", "budget", "pruner", "scalarize",
+    "report_dir",
 )
 
 
@@ -336,6 +388,7 @@ class ExperimentSpec:
     criteria: List[CriterionSpec]
     sampler: SamplerSpec = dataclasses.field(default_factory=SamplerSpec)
     executor: ExecutorSpec = dataclasses.field(default_factory=ExecutorSpec)
+    schedule: ScheduleSpec = dataclasses.field(default_factory=ScheduleSpec)
     target: str = "host_cpu"
     cache: CacheSpec = dataclasses.field(default_factory=CacheSpec)
     persistence: Optional[str] = None
@@ -401,6 +454,7 @@ class ExperimentSpec:
             criteria=criteria,
             sampler=SamplerSpec.from_raw(raw.get("sampler")),
             executor=ExecutorSpec.from_raw(raw.get("executor")),
+            schedule=ScheduleSpec.from_raw(raw.get("schedule")),
             target=target,
             cache=CacheSpec.from_raw(raw.get("cache")),
             persistence=None if persistence is None else str(persistence),
@@ -430,6 +484,7 @@ class ExperimentSpec:
             "search_space": dict(self.search_space),
             "sampler": self.sampler.to_dict(),
             "executor": self.executor.to_dict(),
+            "schedule": self.schedule.to_dict(),
             "criteria": [c.to_dict() for c in self.criteria],
             "target": self.target,
             "cache": self.cache.to_dict(),

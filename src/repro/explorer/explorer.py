@@ -109,16 +109,22 @@ class SpecObjective:
             value = runner.evaluate(model, trial=trial)
         else:
             value = runner.evaluate_multi(model, trial=trial)
-        trial.set_user_attr("worker", {"pid": os.getpid(), **cache.stats.as_dict()})
+        worker = {"pid": os.getpid(), **cache.stats.as_dict()}
+        if cache.disk is not None:
+            worker.update(cache.disk.stats())
+        trial.set_user_attr("worker", worker)
         return value
 
 
 def _aggregate_cache_stats(trials) -> Optional[Dict[str, Any]]:
     """Sum each worker process's final cumulative cache counters (keyed
     by pid; counters are monotone, so the elementwise max per pid is that
-    worker's total — same discipline as benchmarks/bench_nas.py)."""
+    worker's total — same discipline as benchmarks/bench_nas.py).  The
+    disk tier's compaction counters ride along when a disk store is
+    configured."""
     per_pid: Dict[int, Dict[str, Any]] = {}
-    counters = ("hits", "disk_hits", "misses")
+    counters = ("hits", "disk_hits", "misses",
+                "compactions", "dropped_superseded", "dropped_lru")
     for t in trials:
         w = t.user_attrs.get("worker")
         if not isinstance(w, dict) or "pid" not in w:
@@ -161,6 +167,7 @@ class ExplorationReport:
     sampler: str
     backend: str
     n_workers: int
+    schedule: Dict[str, Any]
     directions: List[str]
     n_trials: int
     states: Dict[str, int]
@@ -229,24 +236,24 @@ class Explorer:
             storage=spec.persistence,
             n_workers=spec.executor.n_workers,
             backend=spec.executor.build(),
+            schedule=spec.schedule.mode,
+            tell_order=spec.schedule.tell_order,
+            window=spec.schedule.window,
         )
         self.study = study
         self._objective = objective = SpecObjective(spec.to_dict())
 
-        n_workers = spec.executor.n_workers
-        timeout = spec.budget.timeout_s
         # persistence resume: already-stored trials count against the budget
         remaining = spec.budget.n_trials - len(study.trials)
         t0 = time.perf_counter()
-        while remaining > 0:
-            # without a timeout run the whole budget in one optimize() call
-            # (one executor start/shutdown); with one, chunk so the deadline
-            # is checked between batches — granularity is one chunk
-            chunk = remaining if timeout is None else min(remaining, max(1, n_workers) * 2)
-            study.optimize(objective, chunk, n_workers=n_workers)
-            remaining -= chunk
-            if timeout is not None and time.perf_counter() - t0 >= timeout:
-                break
+        if remaining > 0:
+            # budget.timeout_s is enforced inside the scheduler —
+            # per-submission under the sliding window, per-batch under the
+            # batch scheduler — so a timeout can't overshoot by a whole
+            # batch of slow trials
+            study.optimize(objective, remaining,
+                           n_workers=spec.executor.n_workers,
+                           timeout_s=spec.budget.timeout_s)
         wall_clock = time.perf_counter() - t0
 
         report = self._build_report(wall_clock)
@@ -314,6 +321,7 @@ class Explorer:
             sampler=spec.sampler.name,
             backend=spec.executor.backend,
             n_workers=spec.executor.n_workers,
+            schedule=spec.schedule.to_dict(),
             directions=list(spec.directions),
             n_trials=len(study.trials),
             states=states,

@@ -19,17 +19,21 @@ called by both the live samplers and the detached plans, so the two
 paths cannot drift apart numerically.
 
 ``DetachedTrial`` is the worker-side stand-in for :class:`Trial`: same
-suggest/report/user-attr surface, no study.  ``should_prune`` always
-returns ``False`` — pruners read study-wide history, which lives in the
-parent; use the thread backend when intermediate-value pruning matters.
+suggest/report/user-attr surface, no study.  Pruning works through a
+:class:`PrunerContext` — a picklable snapshot of the study pruner plus
+the intermediate-value history visible at submit time — so
+MedianPruner/ASHA terminate doomed trials *inside* the worker instead of
+after a full evaluation.  Without a context (no study pruner, or an
+unpicklable one) ``should_prune`` returns ``False``.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 import random
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
-from repro.search.trial import Distribution
+from repro.search.trial import Distribution, TrialState
 
 
 # ---------------------------------------------------------------------------
@@ -187,6 +191,66 @@ class DetachedNSGA2(DetachedSampler):
 
 
 # ---------------------------------------------------------------------------
+# worker-side pruning
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TrialRecord:
+    """One study trial's pruning-relevant history, picklable: exactly the
+    attributes the shipped pruners read (``state``, ``intermediate``,
+    ``values``).  A custom pruner touching anything else on a study trial
+    raises inside :meth:`PrunerContext.should_prune`, which degrades to
+    "don't prune" rather than killing the worker trial."""
+
+    state: TrialState
+    intermediate: Dict[int, float]
+    values: Optional[Tuple[float, ...]] = None
+
+
+class StudyView:
+    """Minimal study stand-in handed to a pruner inside a worker: the
+    ``directions`` tuple plus ``trials`` as :class:`TrialRecord`s."""
+
+    def __init__(self, directions: Tuple[str, ...], trials: List[TrialRecord]):
+        self.directions = directions
+        self.trials = trials
+
+
+class PrunerContext:
+    """Picklable pruning snapshot shipped with a detached plan.
+
+    Holds the study's pruner instance, its directions, and the
+    intermediate-value history visible when the trial was submitted —
+    completed trials plus whatever sibling workers have streamed back so
+    far.  The decision is therefore *asynchronous* in the ASHA sense:
+    based on a slightly stale rung population, never waiting on the
+    parent.  MedianPruner and SuccessiveHalvingPruner read only what
+    :class:`TrialRecord` carries, so they run unchanged."""
+
+    def __init__(self, pruner: Any, directions: Tuple[str, ...],
+                 records: List[TrialRecord]):
+        self.pruner = pruner
+        self.directions = tuple(directions)
+        self.records = records
+
+    def should_prune(self, trial: "DetachedTrial") -> bool:
+        if not trial.intermediate:
+            return False
+        # the live path sees the asking trial inside study.trials too
+        # (ASHA counts its own rung value), so mirror that here
+        view = StudyView(
+            self.directions,
+            self.records + [TrialRecord(TrialState.RUNNING, trial.intermediate)],
+        )
+        try:
+            return bool(self.pruner.prune(view, trial))
+        except Exception:
+            # a pruner that needs more study state than the snapshot
+            # carries must not crash the trial — run it to completion
+            return False
+
+
+# ---------------------------------------------------------------------------
 # worker-side trial
 # ---------------------------------------------------------------------------
 
@@ -195,9 +259,14 @@ class DetachedTrial:
     surface, backed by a :class:`DetachedSampler` plan instead of a live
     study.  Everything it accumulates (params, distributions, attrs,
     intermediate reports) is merged back into the real trial by the
-    executor when the worker returns."""
+    executor when the worker returns.  ``report`` additionally streams
+    each intermediate value to ``report_queue`` (when the executor
+    provides one) so the parent — and through it, later submissions'
+    pruner snapshots — see sibling progress before the trial finishes."""
 
-    def __init__(self, number: int, sampler: DetachedSampler):
+    def __init__(self, number: int, sampler: DetachedSampler,
+                 pruner: Optional[PrunerContext] = None,
+                 report_queue: Any = None):
         self.number = number
         self.params: Dict[str, Any] = {}
         self.distributions: Dict[str, Distribution] = {}
@@ -205,6 +274,8 @@ class DetachedTrial:
         self.user_attrs: Dict[str, Any] = {}
         self.system_attrs: Dict[str, Any] = {}
         self._sampler = sampler
+        self._pruner = pruner
+        self._report_queue = report_queue
 
     def _suggest(self, name: str, dist: Distribution) -> Any:
         if name in self.params:
@@ -225,11 +296,19 @@ class DetachedTrial:
 
     def report(self, step: int, value: float) -> None:
         self.intermediate[int(step)] = float(value)
+        if self._report_queue is not None:
+            try:
+                self._report_queue.put_nowait((self.number, int(step), float(value)))
+            except Exception:
+                # best-effort streaming: a full/closed channel only makes
+                # sibling snapshots staler, it must not fail the trial
+                pass
 
     def should_prune(self) -> bool:
-        # Pruners consult study-wide trial history, which lives in the
-        # parent process; a detached trial never prunes.
-        return False
+        if self._pruner is None:
+            # no pruner shipped (study has none, or it didn't pickle)
+            return False
+        return self._pruner.should_prune(self)
 
     def set_user_attr(self, key: str, value: Any) -> None:
         self.user_attrs[key] = value

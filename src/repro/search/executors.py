@@ -1,8 +1,7 @@
 """Pluggable evaluation executors for :class:`ParallelStudy`.
 
-The study owns *what* runs (batch-ask, tell-in-trial-order, batch
-draining on errors); an executor owns *where* a batch of objective calls
-runs:
+The study owns *what* runs (scheduling, tell order, error draining); an
+executor owns *where* objective calls run:
 
   * :class:`SerialExecutor`  — in the calling thread, one at a time.
     The reference backend: zero concurrency, zero surprises.
@@ -19,24 +18,38 @@ runs:
     fixed seed yields identical trials on every backend at any worker
     count.  Everything the worker-side trial accumulates — params,
     distributions, user/system attrs, intermediate reports — is merged
-    back into the parent's trial before ``tell``.
+    back into the parent's trial before ``tell``.  When the study has a
+    (picklable) pruner, every submission also carries a
+    :class:`~repro.search.detached.PrunerContext` snapshot and a report
+    channel, so doomed trials terminate *inside* the worker.
 
-All three return, for each trial in the batch, either a
-``(values, state)`` outcome or the ``BaseException`` the objective
-escaped with; they never raise from ``run_batch`` itself, so the study's
-batch-draining error path sees every sibling result.
+The primary surface is **streaming**: ``submit(study, objective, trial,
+catch)`` schedules one evaluation, ``next_completed()`` blocks for the
+next finished one and returns ``(trial, outcome)`` where the outcome is
+either ``(values, state)`` or the ``BaseException`` the objective
+escaped with — never raised, so the scheduler sees every sibling
+result.  ``run_batch`` is a shim over the streaming surface kept for the
+batch scheduler and executor-parity tests.  ``cancel_pending()`` pulls
+back submissions whose evaluation has not started (the error path uses
+it so queued trials don't run — or stay RUNNING — after a failure).
 """
 from __future__ import annotations
 
 import dataclasses
 import multiprocessing
 import pickle
+import queue as queue_module
 import traceback
 from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
 from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 from repro.explorer.registry import EXECUTORS
-from repro.search.detached import DetachedSampler, DetachedTrial
+from repro.search.detached import (
+    DetachedSampler,
+    DetachedTrial,
+    PrunerContext,
+    TrialRecord,
+)
 from repro.search.study import evaluate_trial
 from repro.search.trial import Distribution, Trial, TrialState
 
@@ -77,11 +90,12 @@ def _portable_exception(e: BaseException) -> BaseException:
 
 
 def run_detached_trial(objective: Callable, number: int, plan: DetachedSampler,
-                       catch: Tuple) -> WorkerResult:
+                       catch: Tuple, pruner: Optional[PrunerContext] = None,
+                       report_queue: Any = None) -> WorkerResult:
     """Worker entry point: evaluate the objective on a detached trial.
     Uncaught exceptions are *returned* (not raised) so the sampled params
     and attrs collected before the failure still reach the parent."""
-    trial = DetachedTrial(number, plan)
+    trial = DetachedTrial(number, plan, pruner=pruner, report_queue=report_queue)
     error: Optional[BaseException] = None
     try:
         values, state = evaluate_trial(objective, trial, catch)
@@ -101,14 +115,46 @@ def run_detached_trial(objective: Callable, number: int, plan: DetachedSampler,
 # executors
 # ---------------------------------------------------------------------------
 
+class _StreamState:
+    """Per-executor streaming bookkeeping.  ``pending`` is touched only
+    by the scheduler thread; ``done`` is the completion channel fed by
+    pool callbacks (or inline, for the serial backend)."""
+
+    def __init__(self):
+        self.done: "queue_module.SimpleQueue" = queue_module.SimpleQueue()
+        self.pending: Dict[int, Tuple[Trial, Any]] = {}  # number -> (trial, future|None)
+
+
 class BaseExecutor:
-    """Lifecycle: ``start(n_workers)``, any number of ``run_batch`` calls,
-    then ``shutdown()`` (optimize does all three; an executor instance is
+    """Lifecycle: ``start(n_workers)``, any number of ``submit`` /
+    ``next_completed`` rounds (or ``run_batch`` calls), then
+    ``shutdown()`` (optimize does all of it; an executor instance is
     restartable).  ``start`` on an already-started executor keeps the
     existing pool, so a caller can pre-start (and :meth:`warmup`) an
-    executor before handing it to ``optimize``."""
+    executor before handing it to ``optimize``.
+
+    Subclasses implement :meth:`submit`; completions flow through the
+    shared stream state via :meth:`_complete`, as ``(trial, thunk)``
+    pairs where the thunk — run in the scheduler thread by
+    :meth:`next_completed` — produces the final outcome (and, for the
+    process backend, merges worker state back into the parent trial).
+    """
 
     name = "base"
+
+    def _stream(self) -> _StreamState:
+        st = getattr(self, "_stream_state", None)
+        if st is None:
+            st = self._stream_state = _StreamState()
+        return st
+
+    def _track(self, trial: Trial, future: Any = None) -> None:
+        self._stream().pending[trial.number] = (trial, future)
+
+    def _complete(self, trial: Trial, thunk: Callable[[], Outcome]) -> None:
+        self._stream().done.put((trial, thunk))
+
+    # -- lifecycle -------------------------------------------------------------
 
     def start(self, n_workers: int) -> None:
         pass
@@ -122,23 +168,85 @@ class BaseExecutor:
         backend init) land before the first measured batch.  In-process
         executors share the parent's modules, so the default is a no-op."""
 
+    # -- streaming surface -----------------------------------------------------
+
+    def submit(self, study, objective: Callable, trial: Trial, catch: Tuple) -> None:
+        """Schedule one objective evaluation; returns immediately (the
+        serial backend evaluates inline, which is its semantics)."""
+        raise NotImplementedError
+
+    def pending_count(self) -> int:
+        """Submissions not yet returned by :meth:`next_completed`."""
+        return len(self._stream().pending)
+
+    def next_completed(self) -> Tuple[Trial, Outcome]:
+        """Block until any in-flight submission finishes; return its
+        trial and outcome.  Outcomes are ``(values, state)`` or the
+        ``BaseException`` the objective escaped with — never raised, so
+        the scheduler's draining error path sees every sibling result."""
+        st = self._stream()
+        while True:
+            if not st.pending:
+                raise RuntimeError("next_completed() with no in-flight submissions")
+            trial, thunk = st.done.get()
+            # identity check, not just number: a cancelled submission's
+            # callback still enqueues here, and a stale entry left from a
+            # previous optimize round on a reused executor could otherwise
+            # collide with a new study's trial of the same number
+            entry = st.pending.get(trial.number)
+            if entry is None or entry[0] is not trial:
+                continue
+            st.pending.pop(trial.number)
+            return trial, thunk()
+
+    def cancel_pending(self) -> List[Trial]:
+        """Cancel submissions whose evaluation has not started and return
+        their trials (the scheduler tells them FAIL with the cancellation
+        recorded).  Already-running evaluations keep going — drain them
+        with :meth:`next_completed`."""
+        st = self._stream()
+        cancelled: List[Trial] = []
+        for number, (trial, future) in list(st.pending.items()):
+            if future is not None and future.cancel():
+                st.pending.pop(number, None)
+                cancelled.append(trial)
+        return cancelled
+
+    # -- batch shim ------------------------------------------------------------
+
     def run_batch(self, study, objective: Callable, trials: List[Trial],
                   catch: Tuple) -> List[Outcome]:
-        raise NotImplementedError
+        """Submit ``trials``, wait for all of them, return outcomes in
+        trial order.  The whole batch drains before any outcome is
+        surfaced, so sibling results of a failing trial are preserved."""
+        for trial in trials:
+            self.submit(study, objective, trial, catch)
+        outcomes: Dict[int, Outcome] = {}
+        for _ in trials:
+            trial, outcome = self.next_completed()
+            outcomes[trial.number] = outcome
+        return [outcomes[t.number] for t in trials]
+
+
+def _future_outcome(future) -> Outcome:
+    try:
+        return future.result()
+    except BaseException as e:
+        return e
 
 
 @EXECUTORS.register("serial")
 class SerialExecutor(BaseExecutor):
     name = "serial"
 
-    def run_batch(self, study, objective, trials, catch):
-        out: List[Outcome] = []
-        for trial in trials:
-            try:
-                out.append(evaluate_trial(objective, trial, catch))
-            except BaseException as e:
-                out.append(e)
-        return out
+    def submit(self, study, objective, trial, catch):
+        outcome: Outcome
+        try:
+            outcome = evaluate_trial(objective, trial, catch)
+        except BaseException as e:
+            outcome = e
+        self._track(trial)
+        self._complete(trial, lambda outcome=outcome: outcome)
 
 
 @EXECUTORS.register("thread")
@@ -157,22 +265,20 @@ class ThreadExecutor(BaseExecutor):
             self._pool.shutdown(wait=True)
             self._pool = None
 
-    def run_batch(self, study, objective, trials, catch):
-        futures = [self._pool.submit(evaluate_trial, objective, t, catch) for t in trials]
-        out: List[Outcome] = []
-        for fut in futures:
-            try:
-                out.append(fut.result())
-            except BaseException as e:
-                out.append(e)
-        return out
+    def submit(self, study, objective, trial, catch):
+        future = self._pool.submit(evaluate_trial, objective, trial, catch)
+        self._track(trial, future)
+        future.add_done_callback(
+            lambda f, trial=trial: self._complete(trial, lambda: _future_outcome(f)))
 
 
 @EXECUTORS.register("process")
 class ProcessExecutor(BaseExecutor):
     """Evaluate trials in worker processes (default start method: spawn —
     forking a process that already initialized XLA's thread pools is not
-    safe).  Worker-side pruning is disabled; see DetachedTrial."""
+    safe).  When the study has a picklable pruner, each submission ships
+    a pruner snapshot + a report channel, so workers prune doomed trials
+    themselves (see :class:`~repro.search.detached.PrunerContext`)."""
 
     name = "process"
 
@@ -180,6 +286,10 @@ class ProcessExecutor(BaseExecutor):
         self.mp_context = mp_context
         self._pool: Optional[ProcessPoolExecutor] = None
         self._n_workers = 0
+        self._manager = None          # multiprocessing.Manager for the report channel
+        self._report_queue = None     # proxy queue workers stream reports into
+        self._live_reports: Dict[int, Dict[int, float]] = {}
+        self._pruner_ok: Dict[int, Tuple[Any, bool]] = {}  # id -> (pruner, picklable?)
 
     def start(self, n_workers):
         if self._pool is not None:
@@ -192,6 +302,11 @@ class ProcessExecutor(BaseExecutor):
         if self._pool is not None:
             self._pool.shutdown(wait=True)
             self._pool = None
+        if self._manager is not None:
+            self._manager.shutdown()
+            self._manager = None
+            self._report_queue = None
+        self._live_reports.clear()
 
     def warmup(self, fn):
         """Run ``fn`` once per worker.  ``fn`` should be slow enough
@@ -203,37 +318,96 @@ class ProcessExecutor(BaseExecutor):
         for fut in [self._pool.submit(fn) for _ in range(self._n_workers)]:
             fut.result()
 
+    # -- worker-side pruning ---------------------------------------------------
+
+    def _pruner_picklable(self, pruner) -> bool:
+        # the memo holds a strong reference to the pruner alongside the
+        # verdict: keyed by id() alone, a garbage-collected pruner's
+        # address could be reused by a different object and return the
+        # wrong cached answer
+        entry = self._pruner_ok.get(id(pruner))
+        if entry is not None and entry[0] is pruner:
+            return entry[1]
+        try:
+            pickle.dumps(pruner)
+            ok = True
+        except Exception:
+            ok = False  # degrade: no worker-side pruning for this study
+        self._pruner_ok[id(pruner)] = (pruner, ok)
+        return ok
+
+    def _drain_reports(self) -> None:
+        """Pull streamed (number, step, value) intermediate reports into
+        the parent-side live view consulted by new pruner snapshots."""
+        q = self._report_queue
+        if q is None:
+            return
+        while True:
+            try:
+                number, step, value = q.get_nowait()
+            except Exception:  # queue.Empty, or the manager going down
+                break
+            self._live_reports.setdefault(int(number), {})[int(step)] = float(value)
+
+    def _pruner_context(self, study) -> Optional[PrunerContext]:
+        """Snapshot the pruner + intermediate history for one submission.
+        Called under the study lock (siblings' merged state is stable)."""
+        pruner = getattr(study, "pruner", None)
+        if pruner is None or not self._pruner_picklable(pruner):
+            return None
+        if self._report_queue is None:
+            ctx = multiprocessing.get_context(self.mp_context)
+            self._manager = ctx.Manager()
+            self._report_queue = self._manager.Queue()
+        self._drain_reports()
+        records: List[TrialRecord] = []
+        for t in study.trials:
+            inter = dict(t.intermediate)
+            live = self._live_reports.get(t.number)
+            if live:
+                inter = {**live, **inter}  # merged-back values win
+            if inter:
+                records.append(TrialRecord(t.state, inter, t.values))
+        return PrunerContext(pruner, study.directions, records)
+
+    # -- submission ------------------------------------------------------------
+
     def _merge(self, study, trial: Trial, res: WorkerResult) -> None:
         trial.params.update(res.params)
         trial.distributions.update(res.distributions)
         trial.user_attrs.update(res.user_attrs)
         trial.system_attrs.update(res.system_attrs)
         trial.intermediate.update(res.intermediate)
+        self._live_reports.pop(res.number, None)  # superseded by the merge
         with study._lock:
             for name, dist in res.distributions.items():
                 study.distribution_registry.setdefault(name, dist)
 
-    def run_batch(self, study, objective, trials, catch):
+    def _collect(self, study, trial: Trial, future) -> Outcome:
+        try:
+            res = future.result()
+        except BaseException as e:  # payload/result failed to pickle, worker died
+            # drop any reports the dead worker streamed: no merge happened,
+            # so later pruner snapshots must not count its partial values
+            self._live_reports.pop(trial.number, None)
+            trial.set_user_attr("error", repr(e))
+            return e
+        self._merge(study, trial, res)
+        if res.error is not None:
+            return res.error
+        return (res.values, res.state)
+
+    def submit(self, study, objective, trial, catch):
         with study._lock:
-            plans = [study.sampler.detached(study, t) for t in trials]
-        futures = [
-            self._pool.submit(run_detached_trial, objective, t.number, plan, catch)
-            for t, plan in zip(trials, plans)
-        ]
-        out: List[Outcome] = []
-        for fut, trial in zip(futures, trials):
-            try:
-                res = fut.result()
-            except BaseException as e:  # payload/result failed to pickle, worker died
-                trial.set_user_attr("error", repr(e))
-                out.append(e)
-                continue
-            self._merge(study, trial, res)
-            if res.error is not None:
-                out.append(res.error)
-            else:
-                out.append((res.values, res.state))
-        return out
+            plan = study.sampler.detached(study, trial)
+            pruner_ctx = self._pruner_context(study)
+        future = self._pool.submit(
+            run_detached_trial, objective, trial.number, plan, catch,
+            pruner=pruner_ctx, report_queue=self._report_queue)
+        self._track(trial, future)
+        future.add_done_callback(
+            lambda f, trial=trial: self._complete(
+                trial, lambda: self._collect(study, trial, f)))
 
 
 def make_executor(backend: Union[str, BaseExecutor]) -> BaseExecutor:

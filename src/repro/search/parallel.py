@@ -1,111 +1,256 @@
-"""ParallelStudy: batch-synchronous concurrent trial evaluation.
+"""ParallelStudy: concurrent trial evaluation — sliding-window or batch.
 
 Hardware-in-the-loop NAS is embarrassingly parallel across candidates —
 each objective call is dominated by XLA compilation and benchmark I/O —
-yet the base :class:`Study` evaluates strictly serially.
-``ParallelStudy`` keeps the exact ask/tell surface and storage format
-but overlaps objective evaluation on a pluggable executor backend
-(:mod:`repro.search.executors`):
+and that cost is highly *skewed*: one architecture compiles in 100 ms,
+its batch sibling in 10 s.  ``ParallelStudy`` keeps the exact ask/tell
+surface and storage format of :class:`Study` but overlaps objective
+evaluation on a pluggable executor backend
+(:mod:`repro.search.executors`) under one of two schedulers:
 
-  * trials are **batch-asked** serially under the study lock (sampler
-    ``on_trial_start`` hooks — population snapshots, grid bookkeeping —
-    never run concurrently);
-  * objectives run on the executor — in-thread (``serial``), on a thread
-    pool (``thread``), or in worker processes (``process``) — drawing
-    suggestions from per-trial RNG streams (``BaseSampler.trial_rng``,
-    re-derived inside process workers from the same ``(seed, number)``
-    key), so the sampled parameters for trial *n* are identical no
-    matter which backend runs it, how many workers run, or how their
-    suggestions interleave;
-  * results are **told in trial order** once the batch completes, so the
-    JSONL storage and the pruner/population state evolve exactly as a
-    serial run with the same batch boundaries would.
+``schedule="sliding_window"`` (the fast path)
+    Completion-driven: a new trial is asked the moment a slot frees and
+    results are told as evaluations finish — no barrier, so workers
+    never idle behind a straggler.  ``tell_order`` controls the tell
+    stream:
 
-Backend choice: ``thread`` (default) when the objective blocks without
-holding the GIL (wall-clock benchmarking, remote devices) or when you
-need intermediate-value pruning; ``process`` when the objective is
-compile-bound — each worker process owns its own XLA compiler, which is
-the only way to get real compile concurrency (the in-process admission
-gate serializes sibling threads).  ``process`` requires a picklable
-objective and disables worker-side pruning.
+      * ``"trial"`` (default) — a small reorder buffer defers each tell
+        until every earlier trial has finished, so the JSONL storage and
+        the study's completed-set evolve in exactly trial order (what
+        the batch scheduler and a serial study produce);
+      * ``"completion"`` — tell immediately.  Fastest and freshest (the
+        pruner/history view lags nothing), at the price of a
+        run-dependent storage order.  ``study.trials`` stays in trial
+        order either way, and with a stateless sampler the sampled
+        parameters and values are identical under both.
+
+    ``window`` bounds in-flight submissions (default: ``n_workers``); a
+    larger window keeps pool queues fed at the cost of asking further
+    ahead of the tells.
+
+``schedule="batch"`` (the legacy scheduler)
+    Trials are asked ``n_workers`` at a time and every batch waits on
+    its slowest member before any new trial is asked.  Population-based
+    samplers see population snapshots at deterministic batch boundaries,
+    so their trajectory is reproducible for a fixed ``n_workers`` and
+    seed on every backend.
+
+``schedule="auto"`` (the default) picks per sampler:
+``sliding_window`` when the sampler declares itself
+``order_independent`` (Random, Grid — suggestions derive from per-trial
+RNG streams / the trial number alone, so a fixed seed yields identical
+trials under either scheduler, any backend, any worker count), and
+``batch`` for history-consulting samplers (TPE/evolution/NSGA-II),
+whose sliding-window trajectory would depend on completion timing.
 
 Determinism: with a stateless sampler (Random/Grid) and a deterministic
-objective, every backend and every ``n_workers`` produce identical trial
-parameters and identical best values.  The first trial runs
-synchronously so GridSampler's distribution registry is complete before
-workers fan out (spaces whose parameter set varies per trial — deeply
-conditional DSL spaces — can still register parameters late, in which
-case Grid's sweep order is best-effort, exactly as in a resumed serial
-study).  Population-based samplers (TPE/evolution/NSGA-II) see
-population snapshots at batch granularity, so their trajectory depends
-on ``n_workers`` (like any batched ask/tell optimizer) but is
-reproducible for a fixed ``n_workers`` and seed — and identical between
-the thread and process backends, whose snapshots are taken at the same
-batch boundaries.
+objective, every scheduler, backend and ``n_workers`` produce identical
+trial parameters and identical best values.  The first trial of an
+empty study runs synchronously so GridSampler's distribution registry
+is complete before workers fan out (spaces whose parameter set varies
+per trial — deeply conditional DSL spaces — can still register
+parameters late, in which case Grid's sweep order is best-effort,
+exactly as in a resumed serial study).
+
+Timeouts: ``optimize(..., timeout_s=...)`` enforces the budget
+per-submission under the sliding window (no new trial is submitted past
+the deadline; in-flight ones drain) and per-batch under the batch
+scheduler.
+
+Error path: an uncaught objective exception stops new submissions,
+**cancels** queued-but-not-started submissions (told FAIL with the
+cancellation recorded in ``user_attrs["cancelled"]``), drains the
+already-running evaluations (their results are told and persisted), and
+then re-raises — no trial is ever left RUNNING.
+
+Backend choice: ``thread`` (default) when the objective blocks without
+holding the GIL (wall-clock benchmarking, remote devices); ``process``
+when the objective is compile-bound — each worker process owns its own
+XLA compiler, which is the only way to get real compile concurrency
+(the in-process admission gate serializes sibling threads).
+``process`` requires a picklable objective; with a picklable pruner it
+prunes *worker-side* from submit-time snapshots (see
+:mod:`repro.search.detached`).
 """
 from __future__ import annotations
 
+import time
 from typing import Callable, Optional, Tuple, Union
 
 from repro.search.executors import BaseExecutor, evaluate_trial, make_executor
 from repro.search.study import Study
 from repro.search.trial import Trial, TrialState
 
+SCHEDULE_MODES = ("auto", "batch", "sliding_window")
+TELL_ORDERS = ("trial", "completion")
+
+# Clock used for timeout enforcement; module-level so tests can stub it.
+_monotonic = time.monotonic
+
+
+def _check_choice(value: str, allowed: Tuple[str, ...], what: str) -> str:
+    if value not in allowed:
+        raise ValueError(f"unknown {what} {value!r}; expected one of {allowed}")
+    return value
+
 
 class ParallelStudy(Study):
     """A Study whose ``optimize`` evaluates objectives concurrently."""
 
     def __init__(self, *args, n_workers: int = 4,
-                 backend: Union[str, BaseExecutor] = "thread", **kwargs):
+                 backend: Union[str, BaseExecutor] = "thread",
+                 schedule: str = "auto", tell_order: str = "trial",
+                 window: Optional[int] = None, **kwargs):
         super().__init__(*args, **kwargs)
         self.default_n_workers = max(1, int(n_workers))
         self.default_backend = backend
+        self.default_schedule = _check_choice(schedule, SCHEDULE_MODES, "schedule")
+        self.default_tell_order = _check_choice(tell_order, TELL_ORDERS, "tell_order")
+        self.default_window = None if window is None else max(1, int(window))
+
+    # -- scheduling helpers ----------------------------------------------------
+
+    def _resolve_schedule(self, schedule: Optional[str]) -> str:
+        mode = _check_choice(schedule if schedule is not None else self.default_schedule,
+                             SCHEDULE_MODES, "schedule")
+        if mode == "auto":
+            return ("sliding_window"
+                    if getattr(self.sampler, "order_independent", False) else "batch")
+        return mode
+
+    def _tell_outcome(self, trial: Trial, outcome) -> None:
+        if isinstance(outcome, BaseException):
+            trial.set_user_attr("error", repr(outcome))
+            self.tell(trial, None, TrialState.FAIL)
+        else:
+            values, state = outcome
+            self.tell(trial, values, state)
+
+    # -- optimize --------------------------------------------------------------
 
     def optimize(self, objective: Callable[[Trial], object], n_trials: int,
                  n_workers: Optional[int] = None, catch: Tuple = (),
-                 backend: Optional[Union[str, BaseExecutor]] = None) -> None:
+                 backend: Optional[Union[str, BaseExecutor]] = None,
+                 schedule: Optional[str] = None,
+                 tell_order: Optional[str] = None,
+                 window: Optional[int] = None,
+                 timeout_s: Optional[float] = None) -> None:
         workers = max(1, int(n_workers if n_workers is not None else self.default_n_workers))
         executor = make_executor(backend if backend is not None else self.default_backend)
+        mode = self._resolve_schedule(schedule)
+        order = _check_choice(tell_order if tell_order is not None else self.default_tell_order,
+                              TELL_ORDERS, "tell_order")
+        win = window if window is not None else self.default_window
+        win = max(1, int(win)) if win is not None else workers
+        deadline = None if timeout_s is None else _monotonic() + float(timeout_s)
         remaining = int(n_trials)
 
         # Evaluate the first trial synchronously: it registers the space's
         # distributions (GridSampler's mixed-radix bookkeeping) and warms
-        # shared caches before workers fan out, so concurrent trials in
-        # the first real batch see a complete registry regardless of
-        # scheduling order.
+        # shared caches before workers fan out, so concurrent trials see a
+        # complete registry regardless of scheduling order.
         if remaining > 0 and not self.trials:
             trial = self.ask()
             values, state = evaluate_trial(objective, trial, catch)
             self.tell(trial, values, state)
             remaining -= 1
 
-        if remaining <= 0:
+        if remaining <= 0 or (deadline is not None and _monotonic() >= deadline):
             return
         executor.start(workers)
         try:
-            while remaining > 0:
-                batch = [self.ask() for _ in range(min(workers, remaining))]
-                # The executor drains the whole batch before surfacing any
-                # uncaught objective exception: the sibling evaluations
-                # already ran, so their results must be told (and
-                # persisted) rather than silently discarded, leaving
-                # trials stranded as RUNNING.
-                outcomes = executor.run_batch(self, objective, batch, catch)
-                # tell in trial order — outcomes are ordered like the
-                # batch, so storage appends and sampler population updates
-                # are deterministic even when evaluations finish out of
-                # order
-                error: Optional[BaseException] = None
-                for trial, outcome in zip(batch, outcomes):
-                    if isinstance(outcome, BaseException):
-                        error = error or outcome
-                        trial.set_user_attr("error", repr(outcome))
-                        self.tell(trial, None, TrialState.FAIL)
-                    else:
-                        values, state = outcome
-                        self.tell(trial, values, state)
-                if error is not None:
-                    raise error
-                remaining -= len(batch)
+            if mode == "batch":
+                self._optimize_batch(objective, remaining, workers, catch,
+                                     executor, deadline)
+            else:
+                self._optimize_sliding(objective, remaining, catch, executor,
+                                       order, win, deadline)
         finally:
             executor.shutdown()
+
+    # -- batch scheduler (legacy) ----------------------------------------------
+
+    def _optimize_batch(self, objective, remaining, workers, catch, executor,
+                        deadline) -> None:
+        while remaining > 0:
+            if deadline is not None and _monotonic() >= deadline:
+                return
+            batch = [self.ask() for _ in range(min(workers, remaining))]
+            # The executor drains the whole batch before surfacing any
+            # uncaught objective exception: the sibling evaluations
+            # already ran, so their results must be told (and persisted)
+            # rather than silently discarded, leaving trials stranded as
+            # RUNNING.
+            outcomes = executor.run_batch(self, objective, batch, catch)
+            # tell in trial order — outcomes are ordered like the batch,
+            # so storage appends and sampler population updates are
+            # deterministic even when evaluations finish out of order
+            error: Optional[BaseException] = None
+            for trial, outcome in zip(batch, outcomes):
+                if isinstance(outcome, BaseException):
+                    error = error or outcome
+                self._tell_outcome(trial, outcome)
+            if error is not None:
+                raise error
+            remaining -= len(batch)
+
+    # -- sliding-window scheduler ----------------------------------------------
+
+    def _optimize_sliding(self, objective, remaining, catch, executor,
+                          tell_order, window, deadline) -> None:
+        pending_tells = {}  # number -> (trial, outcome), tell_order="trial" only
+        tell_cursor: Optional[int] = None  # next trial number owed a tell
+        error: Optional[BaseException] = None
+        stop_submitting = False
+
+        def flush_tells():
+            nonlocal tell_cursor
+            while tell_cursor in pending_tells:
+                trial, outcome = pending_tells.pop(tell_cursor)
+                self._tell_outcome(trial, outcome)
+                tell_cursor += 1
+
+        def handle(trial, outcome):
+            nonlocal error
+            if isinstance(outcome, BaseException):
+                error = error or outcome
+            if tell_order == "trial":
+                pending_tells[trial.number] = (trial, outcome)
+                flush_tells()
+            else:
+                self._tell_outcome(trial, outcome)
+
+        while True:
+            # fill the window — the deadline is checked before EVERY
+            # submission, so a timeout can never overshoot by a batch
+            while (error is None and not stop_submitting and remaining > 0
+                   and executor.pending_count() < window):
+                if deadline is not None and _monotonic() >= deadline:
+                    stop_submitting = True
+                    break
+                trial = self.ask()
+                if tell_cursor is None:
+                    tell_cursor = trial.number
+                executor.submit(self, objective, trial, catch)
+                remaining -= 1
+            if executor.pending_count() == 0:
+                break
+            trial, outcome = executor.next_completed()
+            handle(trial, outcome)
+            if error is not None:
+                # pull back whatever hasn't started; running trials keep
+                # draining through next_completed above
+                for cancelled in executor.cancel_pending():
+                    cancelled.set_user_attr(
+                        "cancelled",
+                        f"submission cancelled: trial {trial.number} raised "
+                        f"{type(error).__name__}")
+                    handle(cancelled, (None, TrialState.FAIL))
+        # every submission completed or was cancelled, so with
+        # tell_order="trial" the buffer has flushed; sweep defensively in
+        # number order in case a gap ever slipped through
+        for number in sorted(pending_tells):
+            trial, outcome = pending_tells.pop(number)
+            self._tell_outcome(trial, outcome)
+        if error is not None:
+            raise error

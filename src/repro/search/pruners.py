@@ -1,4 +1,20 @@
-"""Pruners: median stopping and asynchronous successive halving (ASHA)."""
+"""Pruners: median stopping and asynchronous successive halving (ASHA).
+
+Worker-side contract: on the process backend a pruner instance is
+pickled into each submission's :class:`~repro.search.detached.PrunerContext`
+and its ``prune(study, trial)`` runs *inside the worker* against a
+:class:`~repro.search.detached.StudyView` — a snapshot exposing only
+``study.directions`` and ``study.trials`` records with ``state``,
+``intermediate`` and ``values``.  Both shipped pruners read nothing
+else, so they run unchanged in workers; a custom pruner that touches
+more study state still works on the serial/thread backends, and on the
+process backend degrades to "don't prune" (the context swallows its
+errors) — or to no worker-side pruning at all if it doesn't pickle.
+ASHA is the natural fit for the sliding-window scheduler: its rungs are
+explicitly asynchronous, so deciding from a slightly stale rung
+population (the submit-time snapshot plus streamed sibling reports) is
+the algorithm working as designed, not an approximation.
+"""
 from __future__ import annotations
 
 import math

@@ -28,6 +28,16 @@ from repro.search.trial import Distribution, Trial, TrialState
 
 
 class BaseSampler:
+    #: True when the sampler's suggestions for trial *n* do not depend on
+    #: which other trials have completed (been told) by the time trial *n*
+    #: is asked.  Random and Grid qualify — their values derive from the
+    #: per-trial RNG stream / the trial number alone — so the sliding-
+    #: window scheduler (schedule="auto") runs them fully asynchronously.
+    #: Population-based samplers (TPE/evolution/NSGA-II) consult completed
+    #: history at ask time, so "auto" keeps them on the batch scheduler,
+    #: whose snapshot boundaries are deterministic.
+    order_independent = False
+
     def __init__(self, seed: Optional[int] = None):
         self._base_seed = seed if seed is not None else random.Random().getrandbits(31)
         self.rng = random.Random(seed)
@@ -63,6 +73,8 @@ class BaseSampler:
 
 @SAMPLERS.register("random")
 class RandomSampler(BaseSampler):
+    order_independent = True
+
     def sample(self, study, trial, name, dist):
         return dist.random(self.trial_rng(trial))
 
@@ -70,6 +82,8 @@ class RandomSampler(BaseSampler):
 @SAMPLERS.register("grid")
 class GridSampler(BaseSampler):
     """Exhaustive sweep over categorical/int grids (continuous -> random)."""
+
+    order_independent = True  # position = f(trial number, registry) only
 
     def sample(self, study, trial, name, dist):
         if dist.kind == "float":

@@ -353,3 +353,72 @@ def test_canonical_key_salted_with_toolchain_versions(tmp_path):
         assert fresh.lookup(("k",)) == (False, None)
     finally:
         dc._TOOLCHAIN = old
+
+
+# ---------------------------------------------------------------------------
+# schedule spec: validation + wiring into the study
+# ---------------------------------------------------------------------------
+
+def test_schedule_spec_validation(tmp_path):
+    raw = make_experiment(tmp_path, schedule={"mode": "eventually"})
+    with pytest.raises(ExperimentError, match="mode.*auto.*batch.*sliding_window"):
+        ExperimentSpec.from_dict(raw)
+    raw = make_experiment(tmp_path, schedule={"tell_order": "sometimes"})
+    with pytest.raises(ExperimentError, match="tell_order"):
+        ExperimentSpec.from_dict(raw)
+    raw = make_experiment(tmp_path, schedule={"window": 0})
+    with pytest.raises(ExperimentError, match="window"):
+        ExperimentSpec.from_dict(raw)
+    raw = make_experiment(tmp_path, schedule={"modus": "batch"})
+    with pytest.raises(ExperimentError, match="unknown key"):
+        ExperimentSpec.from_dict(raw)
+    # bare string shorthand selects the mode
+    spec = ExperimentSpec.from_dict(make_experiment(tmp_path, schedule="batch"))
+    assert spec.schedule.mode == "batch"
+    assert spec.schedule.tell_order == "trial" and spec.schedule.window is None
+
+
+def test_explorer_wires_schedule_and_timeout(tmp_path, monkeypatch):
+    from repro.search import ParallelStudy
+
+    captured = {}
+    orig = ParallelStudy.optimize
+
+    def spy(self, objective, n_trials, **kw):
+        captured.update(kw, n_trials=n_trials)
+        return orig(self, objective, n_trials, **kw)
+
+    monkeypatch.setattr(ParallelStudy, "optimize", spy)
+    raw = make_experiment(
+        tmp_path,
+        sampler={"name": "random", "seed": 0},
+        schedule={"mode": "sliding_window", "tell_order": "completion",
+                  "window": 2},
+        budget={"n_trials": 4, "timeout_s": 120.0},
+    )
+    explorer = Explorer.from_dict(raw)
+    report = explorer.run(save_report=False)
+    assert captured["timeout_s"] == 120.0 and captured["n_trials"] == 4
+    assert explorer.study.default_schedule == "sliding_window"
+    assert explorer.study.default_tell_order == "completion"
+    assert explorer.study.default_window == 2
+    assert report.schedule == {"mode": "sliding_window",
+                               "tell_order": "completion", "window": 2}
+    assert report.n_trials == 4
+
+
+def test_facade_sliding_window_matches_batch_best_trial(tmp_path):
+    def run(mode):
+        raw = make_experiment(
+            tmp_path,
+            sampler={"name": "random", "seed": 11},
+            executor={"backend": "thread", "n_workers": 3},
+            schedule={"mode": mode, "tell_order": "completion"},
+            budget={"n_trials": 10},
+        )
+        return Explorer.from_dict(raw).run(save_report=False)
+
+    batch, sliding = run("batch"), run("sliding_window")
+    assert batch.best is not None
+    assert sliding.best["number"] == batch.best["number"]
+    assert sliding.best["values"] == batch.best["values"]

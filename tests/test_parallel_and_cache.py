@@ -501,3 +501,109 @@ def test_int_log_suggestion_respects_step():
         study.tell(t, 0.0)
     assert all(4 <= v <= 64 and (v - 4) % 4 == 0 for v in values)
     assert len(values) > 3  # still exploring the range, not collapsed
+
+
+# ---------------------------------------------------------------------------
+# disk-cache compaction: size-capped LRU, superseded-salt records first
+# ---------------------------------------------------------------------------
+
+def _fake_salted_record(key_tuple, value, toolchain):
+    """A record whose key carries an arbitrary toolchain salt — what a
+    run under a different jax/jaxlib would have appended."""
+    import json
+
+    key = json.dumps({"key": list(key_tuple), "toolchain": toolchain},
+                     sort_keys=True, separators=(",", ":"))
+    return json.dumps({"key": key, "value": value}) + "\n"
+
+
+def test_disk_cache_compaction_drops_superseded_salt_first(tmp_path):
+    from repro.evaluation import DiskEvaluationCache
+    from repro.ioutils import locked_append
+
+    d = str(tmp_path / "store")
+    cache = DiskEvaluationCache(d, max_entries=4)
+    # plant records from a superseded toolchain directly in the file
+    import os
+
+    path = os.path.join(d, cache.FILENAME)
+    for i in range(3):
+        locked_append(path, _fake_salted_record(
+            ("old", i), float(i), {"jax": "0.0.1", "jaxlib": "0.0.1"}))
+    # current-salt stores push the file over the cap -> compaction
+    for i in range(5):
+        assert cache.store(("cur", i), float(i))
+    assert cache.compactions >= 1
+    assert cache.dropped_superseded >= 3  # every old-salt record gone
+    # the file holds at most max_entries records, all current-salt
+    with open(path) as f:
+        lines = [line for line in f if line.strip()]
+    assert len(lines) <= 4
+    assert all('"old"' not in line for line in lines)
+    # surviving values still served
+    found, value = cache.lookup(("cur", 4))
+    assert found and value == 4.0
+
+
+def test_disk_cache_compaction_lru_keeps_recently_used(tmp_path):
+    from repro.evaluation import DiskEvaluationCache
+
+    cache = DiskEvaluationCache(str(tmp_path / "store"), max_entries=3)
+    for i in range(3):
+        cache.store(("k", i), float(i))
+    # touch k0 so it ranks most-recent before the cap-tripping store
+    assert cache.lookup(("k", 0)) == (True, 0.0)
+    cache.store(("k", 3), 3.0)  # 4 > 3 -> compacts, evicting LRU k1
+    assert cache.dropped_lru >= 1
+    assert cache.lookup(("k", 0)) == (True, 0.0)   # recently used: kept
+    assert cache.lookup(("k", 3)) == (True, 3.0)   # newest: kept
+    assert cache.lookup(("k", 1)) == (False, None)  # LRU: evicted
+    stats = cache.stats()
+    assert stats["compactions"] == cache.compactions
+    assert stats["disk_entries"] == 3
+
+
+def test_disk_cache_sibling_survives_compaction(tmp_path):
+    """A sibling holding an offset past the rewritten file's end must
+    drop its stale view (same truncation-detection path as clear())."""
+    from repro.evaluation import DiskEvaluationCache
+
+    d = str(tmp_path / "store")
+    a = DiskEvaluationCache(d, max_entries=3)
+    for i in range(3):
+        a.store(("k", i), float(i))
+    b = DiskEvaluationCache(d)  # warm-loaded at full length
+    a.store(("k", 3), 3.0)  # compacts: file shrinks below b's offset
+    found, value = b.lookup(("k", 3))
+    assert found and value == 3.0
+
+
+def test_disk_cache_max_entries_env(tmp_path, monkeypatch):
+    from repro.evaluation import DiskEvaluationCache
+
+    monkeypatch.setenv("REPRO_CACHE_MAX_ENTRIES", "2")
+    cache = DiskEvaluationCache(str(tmp_path / "store"))
+    assert cache.max_entries == 2
+    for i in range(4):
+        cache.store(("k", i), float(i))
+    assert cache.compactions >= 1
+    assert len(cache) <= 2
+
+    monkeypatch.setenv("REPRO_CACHE_MAX_ENTRIES", "not-a-number")
+    with pytest.warns(RuntimeWarning, match="REPRO_CACHE_MAX_ENTRIES"):
+        unbounded = DiskEvaluationCache(str(tmp_path / "store2"))
+    assert unbounded.max_entries is None
+
+
+def test_disk_cache_no_spurious_compaction_below_cap(tmp_path):
+    """Regression: the on-disk record count must not double-count this
+    process's own appends (store used to bump a counter the next tail
+    re-scan counted again, firing full-file rewrites at ~half the cap)."""
+    from repro.evaluation import DiskEvaluationCache
+
+    cache = DiskEvaluationCache(str(tmp_path / "store"), max_entries=10)
+    for i in range(10):
+        cache.store(("k", i), float(i))
+        cache.lookup(("k", i))  # interleave reads like the miss->store path
+    assert cache.compactions == 0
+    assert len(cache) == 10
