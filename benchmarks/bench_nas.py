@@ -547,6 +547,98 @@ def bench_explorer_facade() -> None:
 
 
 # ---------------------------------------------------------------------------
+# sweep group: one experiment fanned across targets/samplers over a
+# SHARED disk cache — compile-derived values are scoped by mesh
+# topology, so after the first target has paid for a candidate's
+# compile, every later target with the same topology pays zero
+# ---------------------------------------------------------------------------
+
+SWEEP_SEED = 9
+
+
+def bench_sweep_engine() -> None:
+    """3-target x 2-sampler sweep on the compile-bound modelled-latency
+    objective.  Expands through ``SweepSpec`` and runs cell by cell so
+    per-target XLA compile counts are observable: the first target
+    compiles every unique candidate; the second and third targets (same
+    1x1 mesh topology, different chip constants) must compile ZERO —
+    their modelled latencies come from the cached roofline terms.  A
+    final ``run_sweep`` then resumes every completed cell from its
+    persisted report (re-running nothing) and merges the SweepReport."""
+    import shutil
+    import tempfile
+
+    import yaml as _yaml
+
+    from repro.explorer.sweep import SweepSpec, run_sweep
+    from repro.hwgen.generator import generate_call_count
+
+    cache_dir = tempfile.mkdtemp(prefix="bench-nas-sweep-cache-")
+    report_dir = tempfile.mkdtemp(prefix="bench-nas-sweep-report-")
+    trials = 12
+    try:
+        spec = SweepSpec.from_dict({
+            "name": "bench-sweep",
+            "base": {
+                "name": "bench-sweep-base",
+                "search_space": _yaml.safe_load(PARALLEL_SPACE_YAML),
+                "executor": {"backend": "serial"},
+                "criteria": [
+                    {"estimator": "latency_s", "kind": "objective",
+                     "params": {"batch": 4, "metric": "modelled"}},
+                    # second objective makes the cross-target Pareto
+                    # union non-trivial; it shares the cached artifact
+                    # with latency_s, so compile counts are unchanged
+                    {"estimator": "peak_bytes", "kind": "objective",
+                     "weight": 1.0e-9, "params": {"batch": 4}},
+                ],
+                "budget": {"n_trials": trials},
+            },
+            "axes": {
+                "target": ["host_cpu", "edge_npu", "tpu_v5e"],
+                "sampler": [{"name": "random", "seed": SWEEP_SEED},
+                            {"name": "grid", "seed": SWEEP_SEED}],
+            },
+            "cache": cache_dir,
+            "report_dir": report_dir,
+        })
+        from repro.explorer import Explorer
+
+        per_target: dict = {}
+        for cell in spec.expand():
+            c0, t0 = generate_call_count(), time.perf_counter()
+            Explorer.from_spec(cell.spec).run()
+            dt = time.perf_counter() - t0
+            compiles = generate_call_count() - c0
+            agg = per_target.setdefault(cell.axes["target"],
+                                        {"seconds": 0.0, "compiles": 0})
+            agg["seconds"] += dt
+            agg["compiles"] += compiles
+        first = spec.axes["target"][0]
+        for target, agg in per_target.items():
+            note = f"compiles={agg['compiles']}"
+            if target != first:
+                note += (f";reuses_first_target_compiles="
+                         f"{agg['compiles'] == 0}")
+            emit(f"sweep/{target}", agg["seconds"] / (2 * trials), note)
+
+        # merge pass: every cell's report is on disk, so the sweep engine
+        # must resume all of them (re-running nothing) and just merge
+        t0 = time.perf_counter()
+        merged = run_sweep(spec)
+        dt = time.perf_counter() - t0
+        winners = {k: (v[0]["target"] if v else None)
+                   for k, v in merged.target_rankings.items()}
+        emit("sweep/merged_resume", dt,
+             f"cells={merged.n_cells};resumed={merged.n_resumed};"
+             f"pareto_union={len(merged.pareto_union)};"
+             f"winners={winners}")
+    finally:
+        shutil.rmtree(cache_dir, ignore_errors=True)
+        shutil.rmtree(report_dir, ignore_errors=True)
+
+
+# ---------------------------------------------------------------------------
 # async scheduler group: sliding window vs batch barrier on a
 # latency-skewed objective (the regime hardware-in-the-loop NAS lives in)
 # ---------------------------------------------------------------------------
@@ -660,6 +752,7 @@ def main() -> None:
     bench_hil_pipeline()
     bench_preprocessing_joint()
     bench_explorer_facade()
+    bench_sweep_engine()
     bench_async_scheduler()
     bench_parallel_engine()
     bench_process_engine()

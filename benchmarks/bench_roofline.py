@@ -9,11 +9,12 @@ import os
 
 from benchmarks.common import emit
 from repro.configs import SHAPES, get_arch
+from repro.envvars import read_env
 from repro.evaluation.model_flops import model_flops
 from repro.hwgen.roofline import roofline_from_record
 from repro.hwgen.targets import TPU_V5E
 
-DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "results/dryrun")
+DRYRUN_DIR = read_env("REPRO_DRYRUN_DIR", "results/dryrun")
 N_CHIPS = 256
 
 

@@ -1,0 +1,69 @@
+#!/usr/bin/env python
+"""Verify every relative markdown link in README.md and docs/ resolves.
+
+    python scripts/check_links.py
+
+External (http/https/mailto) links are skipped — CI must not flake on
+the network; what this guards is the internal docs graph: a renamed
+file, a moved section, a typo'd path.  Anchors (``file.md#section``)
+are checked against the target file's headings.
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def _headings(path: str) -> set:
+    anchors = set()
+    with open(path) as f:
+        for line in f:
+            m = re.match(r"#+\s+(.*)", line)
+            if m:
+                text = re.sub(r"[`*]", "", m.group(1)).strip().lower()
+                anchors.add(re.sub(r"[^a-z0-9\- ]", "", text).replace(" ", "-"))
+    return anchors
+
+
+def check_file(md_path: str) -> list:
+    errors = []
+    base = os.path.dirname(md_path)
+    with open(md_path) as f:
+        text = f.read()
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            if target.startswith("#"):
+                if target[1:] not in _headings(md_path):
+                    errors.append(f"{md_path}: broken anchor {target!r}")
+            continue
+        path, _, anchor = target.partition("#")
+        resolved = os.path.normpath(os.path.join(base, path))
+        if not os.path.exists(resolved):
+            errors.append(f"{md_path}: broken link {target!r} "
+                          f"(no such file: {os.path.relpath(resolved, REPO_ROOT)})")
+        elif anchor and resolved.endswith(".md") and anchor not in _headings(resolved):
+            errors.append(f"{md_path}: broken anchor {target!r}")
+    return errors
+
+
+def main() -> int:
+    files = [os.path.join(REPO_ROOT, "README.md")] + sorted(
+        glob.glob(os.path.join(REPO_ROOT, "docs", "**", "*.md"), recursive=True))
+    errors = []
+    for path in files:
+        errors.extend(check_file(path))
+    for e in errors:
+        print(e, file=sys.stderr)
+    if not errors:
+        print(f"all internal links resolve ({len(files)} files)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

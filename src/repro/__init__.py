@@ -24,6 +24,10 @@ _EXPORTS = {
     "ExplorerError": "repro.explorer.registry",
     "UnknownComponentError": "repro.explorer.registry",
     "register_component": "repro.explorer.registry",
+    "SweepSpec": "repro.explorer.sweep",
+    "SweepReport": "repro.explorer.sweep",
+    "SweepError": "repro.explorer.sweep",
+    "run_sweep": "repro.explorer.sweep",
 }
 
 __all__ = sorted(_EXPORTS)

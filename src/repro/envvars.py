@@ -1,0 +1,158 @@
+"""Single registry of every ``REPRO_*`` environment variable.
+
+Each knob is declared exactly once, with its parser, default, and the
+documented malformed-value fallback; the readers
+(:mod:`repro.hwgen.generator`, :mod:`repro.evaluation.disk_cache`,
+:mod:`repro.kernels.ops`, ``benchmarks/bench_roofline.py``) consult this
+registry through :func:`read_env`, and ``scripts/gen_docs.py`` renders
+``docs/reference/env.md`` from the same entries — the prose cannot drift
+from the behaviour because they share one source of truth.
+
+Fallback contract: a malformed value never raises.  It emits a
+``RuntimeWarning`` naming the variable and the value, then behaves as if
+the variable were unset — a typo'd shell export must not explode at
+first compile deep inside a worker thread.  Unset or blank values are
+silent and use the caller's default.
+
+Must stay import-light (stdlib only): :mod:`repro.kernels.ops` reads it
+on the kernel hot path and :mod:`repro.evaluation.disk_cache` at cache
+construction, neither of which may pull in the search stack.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import warnings
+from typing import Any, Callable, Dict, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class EnvVar:
+    """One declared environment knob: parser + documentation metadata."""
+
+    name: str
+    parse: Callable[[str], Any]  # raises ValueError on malformed input
+    expected: str       # what a well-formed value looks like (for the warning)
+    description: str    # what the knob does (docs)
+    default: str        # human-readable default (docs; the *value* is the caller's)
+    malformed: str      # documented fallback behaviour (docs)
+    consulted_by: str   # the reading module(s) (docs)
+
+
+ENV_VARS: Dict[str, EnvVar] = {}
+
+
+def register_env(var: EnvVar) -> EnvVar:
+    """Publish one knob.  Re-registering a name raises — two call sites
+    declaring the same variable with different parsers would make the
+    generated reference ambiguous."""
+    if var.name in ENV_VARS and ENV_VARS[var.name] is not var:
+        raise ValueError(f"environment variable {var.name!r} already registered")
+    ENV_VARS[var.name] = var
+    return var
+
+
+def read_env(name: str, default: Any) -> Any:
+    """Read + parse a registered variable.
+
+    Unset/blank returns ``default`` silently; a value the registered
+    parser rejects warns (``RuntimeWarning`` naming the variable) and
+    returns ``default``.  Reading an unregistered name raises — every
+    ``REPRO_*`` lookup must go through the registry or the generated
+    docs lie by omission.
+    """
+    try:
+        var = ENV_VARS[name]
+    except KeyError:
+        raise KeyError(
+            f"environment variable {name!r} is not registered in "
+            f"repro.envvars.ENV_VARS; declare it there so docs/reference/"
+            f"env.md stays complete"
+        ) from None
+    raw = os.environ.get(name)
+    if raw is None or not raw.strip():
+        return default
+    try:
+        return var.parse(raw)
+    except ValueError:
+        warnings.warn(
+            f"ignoring malformed {name}={raw!r} (expected {var.expected}); "
+            f"falling back to the default of {default!r}",
+            RuntimeWarning, stacklevel=3)
+        return default
+
+
+def _positive_int(raw: str) -> int:
+    value = int(raw)
+    if value < 1:
+        raise ValueError(raw)
+    return value
+
+
+def _clamped_int(raw: str) -> int:
+    return max(1, int(raw))
+
+
+def _flag(raw: str) -> bool:
+    return raw not in ("0", "false")
+
+
+# -- the registry ------------------------------------------------------------
+# Declared here, read elsewhere: generator/disk_cache/ops/bench_roofline call
+# read_env() with their own computed defaults.
+
+register_env(EnvVar(
+    name="REPRO_COMPILE_CONCURRENCY",
+    parse=_clamped_int,
+    expected="an integer",
+    description=(
+        "Maximum concurrent XLA compilations per process (the admission "
+        "gate around the generate/benchmark pipeline).  XLA's compiler "
+        "has its own internal thread pool, so unbounded concurrent "
+        "compiles oversubscribe the host; serializing them while workers "
+        "overlap tracing/init/benchmarking pipelines the study instead."),
+    default="`cpu_count / 2` (minimum 1)",
+    malformed=("warns and uses the default; values below 1 clamp to 1 "
+               "(a zero would deadlock every compile)"),
+    consulted_by="`repro/hwgen/generator.py`",
+))
+
+register_env(EnvVar(
+    name="REPRO_CACHE_MAX_ENTRIES",
+    parse=_positive_int,
+    expected="a positive integer",
+    description=(
+        "Record cap for the disk cache's `entries.jsonl`.  An append "
+        "that pushes the file past the cap triggers an in-place "
+        "rewrite under `flock`: superseded-toolchain records are "
+        "dropped first, then least-recently-used records down to ~75% "
+        "of the cap (headroom so steady-state appends don't rewrite "
+        "every time)."),
+    default="unset — the store grows without bound (append-only)",
+    malformed="warns and leaves the store unbounded",
+    consulted_by="`repro/evaluation/disk_cache.py`",
+))
+
+register_env(EnvVar(
+    name="REPRO_PALLAS_INTERPRET",
+    parse=_flag,
+    expected="a flag (`0`/`false` disables, anything else enables)",
+    description=(
+        "Force Pallas kernels into interpreter mode (`0`/`false` "
+        "disables it even off-TPU).  Interpret mode is how non-TPU "
+        "hosts — CI, this container — validate the TPU kernels."),
+    default="enabled unless running on a TPU backend",
+    malformed="not applicable — every non-blank value parses as a flag",
+    consulted_by="`repro/kernels/ops.py`",
+))
+
+register_env(EnvVar(
+    name="REPRO_DRYRUN_DIR",
+    parse=str,
+    expected="a directory path",
+    description=("Output directory for `benchmarks/bench_roofline.py` "
+                 "dry-run artifacts (compiled-program cost records)."),
+    default="`results/dryrun`",
+    malformed="not applicable — every non-blank value is a valid path",
+    consulted_by="`benchmarks/bench_roofline.py`",
+))

@@ -59,7 +59,6 @@ from __future__ import annotations
 import json
 import os
 import threading
-import warnings
 from typing import Any, Dict, Hashable, List, Optional, Tuple
 
 try:
@@ -67,6 +66,7 @@ try:
 except ImportError:  # pragma: no cover — non-POSIX hosts
     fcntl = None
 
+from repro.envvars import read_env
 from repro.ioutils import locked_append
 
 DEFAULT_DIR = os.path.join("results", "cache")
@@ -75,20 +75,9 @@ MAX_ENTRIES_ENV = "REPRO_CACHE_MAX_ENTRIES"
 
 
 def _max_entries_from_env() -> Optional[int]:
-    raw = os.environ.get(MAX_ENTRIES_ENV)
-    if raw is None or not raw.strip():
-        return None
-    try:
-        value = int(raw)
-        if value < 1:
-            raise ValueError(raw)
-    except ValueError:
-        warnings.warn(
-            f"ignoring malformed {MAX_ENTRIES_ENV}={raw!r} "
-            f"(expected a positive integer); cache stays unbounded",
-            RuntimeWarning, stacklevel=3)
-        return None
-    return value
+    # declared in repro.envvars (the shared REPRO_* registry): malformed
+    # values warn and leave the store unbounded
+    return read_env(MAX_ENTRIES_ENV, None)
 
 _JSON_SCALARS = (str, int, float, bool, type(None))
 

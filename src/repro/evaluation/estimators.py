@@ -14,6 +14,7 @@ Performance estimators:
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from typing import Any, Callable, Dict, Optional
 
@@ -26,6 +27,7 @@ from repro.evaluation.api import Estimator
 from repro.evaluation.cache import EvaluationCache
 from repro.explorer.registry import ESTIMATORS
 from repro.hwgen.generator import HardwareManager, XLAGenerator
+from repro.hwgen.roofline import roofline_terms
 from repro.hwgen.targets import TargetSpec
 
 
@@ -60,14 +62,29 @@ class ActivationMemoryEstimator(Estimator):
 class _CompiledEstimator(Estimator):
     """Shared machinery for estimators that need a compiled artifact.
 
-    The generated artifact and the derived scalar are both memoized in an
+    The generated artifact and the derived values are memoized in an
     :class:`EvaluationCache` keyed by the candidate's *full* architecture
-    signature (layers + pre-processing) plus the target and batch size.
-    Passing the same cache instance to several estimators makes them share
-    artifacts: latency and memory for one candidate cost one compile.
-    ``cache`` may also be a store-directory path (or ``True`` for the
-    default ``results/cache/``), which wraps a fresh cache around the
-    disk-persistent tier so values survive restarts.
+    signature (layers + pre-processing) plus the batch size and a cache
+    scope.  Passing the same cache instance to several estimators makes
+    them share artifacts: latency and memory for one candidate cost one
+    compile.  ``cache`` may also be a store-directory path (or ``True``
+    for the default ``results/cache/``), which wraps a fresh cache around
+    the disk-persistent tier so values survive restarts.
+
+    **Cache scoping (cross-target reuse).**  A compiled XLA program
+    depends only on the target's mesh topology — chip constants enter
+    the roofline arithmetic *after* compilation — so compile-derived
+    entries (the artifact, peak bytes, the roofline terms behind
+    ``metric="modelled"``) are scoped by ``TargetSpec.mesh_scope``
+    rather than the target name.  Two targets sharing a topology (e.g.
+    the single-chip ``host_cpu`` and ``edge_npu``) therefore reuse each
+    other's compiles: a sweep's second target recompiles nothing for
+    candidates its first target already paid for.  Host-specific
+    *measurements* (``metric="measured"`` wall clock) stay scoped by
+    target name — they are properties of the deployment, not of the
+    program.  (Scope strings changed when this landed, so older disk
+    stores structurally miss and recompute once — same migration
+    behaviour as a toolchain upgrade.)
     """
 
     def __init__(self, target: TargetSpec | str, batch: int = 1,
@@ -80,17 +97,37 @@ class _CompiledEstimator(Estimator):
             cache = EvaluationCache(disk=cache)
         self.cache = cache
 
-    def _value_key(self, candidate: BuiltModel):
-        return (self.name, self.generator.target.name, self.batch,
+    def _program_key(self, name: str, candidate: BuiltModel):
+        """Key for chip-independent, compile-derived values: scoped by
+        mesh topology so targets sharing one reuse each other's entries."""
+        return (name, self.generator.target.mesh_scope, self.batch,
+                EvaluationCache.candidate_key(candidate))
+
+    def _target_key(self, name: str, candidate: BuiltModel):
+        """Key for deployment-specific values (wall-clock measurements)."""
+        return (name, self.generator.target.name, self.batch,
                 EvaluationCache.candidate_key(candidate))
 
     def _artifact(self, candidate: BuiltModel):
         l, c = candidate.input_shape[-1], candidate.input_shape[0]
         x = jnp.zeros((self.batch, l, c), jnp.float32)
         params = candidate.init(jax.random.PRNGKey(0))
-        key = ("artifact", self.generator.target.name, self.batch,
-               EvaluationCache.candidate_key(candidate))
+        key = self._program_key("artifact", candidate)
         artifact = self.generator.generate_cached(self.cache, key, candidate.apply, (params, x))
+        target = self.generator.target
+        if artifact.target is not target:
+            # the cached artifact was compiled by a sibling target sharing
+            # this mesh topology: the program is identical, but its
+            # target-dependent view (TargetSpec, roofline) is theirs —
+            # rebind to OURS so measurement dispatch, chip constants, and
+            # fits_memory are correct for this estimator's target
+            artifact = dataclasses.replace(
+                artifact, target=target,
+                roofline=roofline_terms(
+                    hlo_flops=artifact.flops,
+                    hlo_bytes=artifact.bytes_accessed,
+                    collective_bytes=artifact.collective_bytes,
+                    n_chips=1, chip=target.chip))
         return artifact, (params, x)
 
 
@@ -122,13 +159,30 @@ class CompiledLatencyEstimator(_CompiledEstimator):
         self.metric = metric
 
     def estimate(self, candidate: BuiltModel, context=None) -> float:
+        if self.metric == "modelled":
+            # cache the chip-independent program quantities and apply the
+            # target's chip constants afterwards: a second target with
+            # the same mesh topology gets its modelled latency from the
+            # cached terms without compiling anything
+            def compute_terms():
+                artifact, _ = self._artifact(candidate)
+                return [float(artifact.flops), float(artifact.bytes_accessed),
+                        float(artifact.collective_bytes)]
+
+            terms = self.cache.get_or_compute(
+                self._program_key("roofline_terms", candidate), compute_terms)
+            report = roofline_terms(
+                hlo_flops=terms[0], hlo_bytes=terms[1],
+                collective_bytes=terms[2], n_chips=1,
+                chip=self.generator.target.chip)
+            return float(report.bound_s)
+
         def compute() -> float:
             artifact, concrete = self._artifact(candidate)
-            if self.metric == "modelled":
-                return float(artifact.roofline.bound_s)
             return float(self.manager.benchmark(artifact, concrete)["latency_s"])
 
-        return self.cache.get_or_compute((self.metric,) + self._value_key(candidate), compute)
+        return self.cache.get_or_compute(
+            ("measured",) + self._target_key(self.name, candidate), compute)
 
 
 @ESTIMATORS.register("peak_bytes")
@@ -140,7 +194,9 @@ class CompiledMemoryEstimator(_CompiledEstimator):
             artifact, _ = self._artifact(candidate)
             return float(artifact.memory.get("peak_bytes_per_device", 0))
 
-        return self.cache.get_or_compute(self._value_key(candidate), compute)
+        # memory_analysis is a property of the compiled program, not the
+        # chip, so targets sharing a mesh topology share the entry
+        return self.cache.get_or_compute(self._program_key(self.name, candidate), compute)
 
 
 @ESTIMATORS.register("val_accuracy")

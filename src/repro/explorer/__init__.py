@@ -34,6 +34,12 @@ _EXPORTS = {
     "Explorer": "repro.explorer.explorer",
     "ExplorationReport": "repro.explorer.explorer",
     "SpecObjective": "repro.explorer.explorer",
+    # sweep layer
+    "SweepSpec": "repro.explorer.sweep",
+    "SweepCell": "repro.explorer.sweep",
+    "SweepReport": "repro.explorer.sweep",
+    "SweepError": "repro.explorer.sweep",
+    "run_sweep": "repro.explorer.sweep",
 }
 
 __all__ = sorted(_EXPORTS)

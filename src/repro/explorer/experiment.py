@@ -86,6 +86,17 @@ class SamplerSpec:
     name: str = "random"
     options: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
+    # FIELD_DOCS on every spec class is read by repro.explorer.docgen to
+    # generate docs/reference/experiment_spec.md — the table lives next
+    # to the validator so the two cannot drift
+    FIELD_DOCS = {
+        "name": "registered sampler key (see `components.md`); a bare "
+                "string is shorthand for `{name: ...}`",
+        "options": "every other key is passed to the sampler constructor "
+                   "and validated against its signature at parse time "
+                   "(e.g. `seed`, `population`)",
+    }
+
     @classmethod
     def from_raw(cls, raw: Any, where: str = "sampler") -> "SamplerSpec":
         if raw is None:
@@ -114,6 +125,13 @@ class SamplerSpec:
 class PrunerSpec:
     name: str
     options: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    FIELD_DOCS = {
+        "name": "registered pruner key; omit the whole `pruner` section "
+                "to disable pruning",
+        "options": "remaining keys go to the pruner constructor "
+                   "(e.g. `n_startup_trials`, `reduction_factor`)",
+    }
 
     @classmethod
     def from_raw(cls, raw: Any, where: str = "pruner") -> Optional["PrunerSpec"]:
@@ -145,6 +163,13 @@ class ExecutorSpec:
     n_workers: int = 1
 
     KEYS = ("backend", "n_workers")
+    FIELD_DOCS = {
+        "backend": "registered executor key (`serial`/`thread`/`process` "
+                   "built in); a bare string is shorthand for "
+                   "`{backend: ...}`",
+        "n_workers": "worker slots (>= 1); also the default sliding-window "
+                     "size",
+    }
 
     @classmethod
     def from_raw(cls, raw: Any, where: str = "executor") -> "ExecutorSpec":
@@ -184,6 +209,17 @@ class ScheduleSpec:
     KEYS = ("mode", "tell_order", "window")
     MODES = ("auto", "batch", "sliding_window")
     TELL_ORDERS = ("trial", "completion")
+    FIELD_DOCS = {
+        "mode": "one of `auto` | `batch` | `sliding_window`; `auto` picks "
+                "sliding for order-independent samplers (random/grid), "
+                "batch for history-consulting ones; a bare string is "
+                "shorthand for `{mode: ...}`",
+        "tell_order": "`trial` (reorder buffer, deterministic storage "
+                      "order) or `completion` (fastest; tells land as "
+                      "evaluations finish)",
+        "window": "max in-flight submissions under the sliding window "
+                  "(integer >= 1; default: `n_workers`)",
+    }
 
     @classmethod
     def from_raw(cls, raw: Any, where: str = "schedule") -> "ScheduleSpec":
@@ -228,6 +264,21 @@ class CriterionSpec:
     params: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     KEYS = ("estimator", "kind", "direction", "weight", "limit", "params")
+    FIELD_DOCS = {
+        "estimator": "registered estimator key; a bare string is "
+                     "shorthand for `{estimator: ...}`; each estimator "
+                     "may appear at most once",
+        "kind": "one of `objective` | `soft_constraint` | "
+                "`hard_constraint`; at least one criterion must be an "
+                "objective",
+        "direction": "`minimize` (default) or `maximize`",
+        "weight": "scalarization weight (float, default 1.0)",
+        "limit": "constraint threshold; required for both constraint "
+                 "kinds, ignored for objectives",
+        "params": "estimator constructor kwargs, validated against its "
+                  "signature at parse time (`target` and `cache` are "
+                  "injected by the Explorer)",
+    }
 
     @classmethod
     def from_raw(cls, raw: Any, where: str) -> "CriterionSpec":
@@ -299,6 +350,12 @@ class CriterionSpec:
 class CacheSpec:
     dir: Optional[str] = None  # disk store directory; None = memory-only
 
+    FIELD_DOCS = {
+        "dir": "disk store directory for the persistent cache tier; a "
+               "bare path or `true` (default `results/cache`) are "
+               "shorthand; omit the section for a memory-only cache",
+    }
+
     @classmethod
     def from_raw(cls, raw: Any, where: str = "cache") -> "CacheSpec":
         if raw is None or raw is False:
@@ -324,6 +381,14 @@ class BudgetSpec:
     timeout_s: Optional[float] = None
 
     KEYS = ("n_trials", "timeout_s")
+    FIELD_DOCS = {
+        "n_trials": "total trial budget (>= 1; resumed trials from "
+                    "`persistence` count against it); a bare integer is "
+                    "shorthand for `{n_trials: ...}`",
+        "timeout_s": "wall-clock deadline, enforced per-submission under "
+                     "the sliding window / per-batch under the batch "
+                     "scheduler; `null` = no deadline",
+    }
 
     @classmethod
     def from_raw(cls, raw: Any, where: str = "budget") -> "BudgetSpec":
@@ -349,6 +414,34 @@ TOP_LEVEL_KEYS = (
     "target", "cache", "persistence", "budget", "pruner", "scalarize",
     "report_dir",
 )
+
+# descriptions for the top-level experiment document, rendered into
+# docs/reference/experiment_spec.md by repro.explorer.docgen; every key
+# in TOP_LEVEL_KEYS must appear here (asserted by the docs generator)
+TOP_LEVEL_DOCS = {
+    "name": "experiment name; names the report artifact "
+            "`<report_dir>/<name>.report.json` (default: `experiment`)",
+    "search_space": "**required** — inline search-space DSL mapping, or "
+                    "`{file: path.yaml}` (relative paths resolve against "
+                    "the experiment file; the loaded space is inlined so "
+                    "the spec stays self-contained)",
+    "sampler": "which sampler proposes trials (see table below)",
+    "executor": "where objective evaluations run (see table below)",
+    "schedule": "how `ParallelStudy` schedules trials (see table below)",
+    "criteria": "**required** — non-empty list of criterion entries "
+                "(see table below); at least one `kind: objective`",
+    "target": "registered hardware target key (default `host_cpu`); "
+              "injected into estimators that accept a `target` kwarg",
+    "cache": "evaluation-cache configuration (see table below)",
+    "persistence": "study storage JSONL path; re-running resumes stored "
+                   "trials against the budget (default: in-memory only)",
+    "budget": "how much to search (see table below)",
+    "pruner": "optional early-stopping pruner (see table below)",
+    "scalarize": "`true` (default): weighted-sum single-objective search; "
+                 "`false`: multi-objective (Pareto) — rejects "
+                 "soft constraints, which only exist in scalarized mode",
+    "report_dir": "directory for the report artifact (default `results`)",
+}
 
 
 def _resolve_search_space(raw: Any, base_dir: Optional[str]) -> Dict[str, Any]:

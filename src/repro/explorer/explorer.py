@@ -177,6 +177,14 @@ class ExplorationReport:
     cache: Optional[Dict[str, Any]]
     wall_clock_s: float
     toolchain: Dict[str, str]
+    # full resolved TargetSpec (chip peak FLOPs/bandwidth, mesh, ...):
+    # registered constants can be edited later, so the numbers that
+    # actually produced this report must travel with it or cross-target
+    # comparisons stop being interpretable
+    target: Optional[Dict[str, Any]] = None
+    # the complete experiment spec, so the report self-describes and a
+    # sweep can detect that a persisted cell still matches its spec
+    spec: Optional[Dict[str, Any]] = None
     artifact: Optional[str] = None
 
     def to_dict(self) -> Dict[str, Any]:
@@ -331,4 +339,6 @@ class Explorer:
             cache=_aggregate_cache_stats(study.trials),
             wall_clock_s=wall_clock,
             toolchain=toolchain_versions(),
+            target=TARGETS.get(spec.target).to_dict(),
+            spec=spec.to_dict(),
         )

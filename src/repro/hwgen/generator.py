@@ -21,13 +21,13 @@ import dataclasses
 import os
 import threading
 import time
-import warnings
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import numpy as np
 
 from repro.compat import cost_analysis_dict
+from repro.envvars import read_env
 from repro.hwgen.hlo_analysis import parse_collectives, total_collective_bytes
 from repro.hwgen.roofline import RooflineReport, roofline_terms
 from repro.hwgen.targets import TargetSpec, get_target
@@ -66,24 +66,12 @@ def _compile_limit() -> int:
     (measured 0.68x aggregate on a 2-core container).  Serializing
     compilation while workers overlap tracing, init and benchmarking
     turns that thrash into a pipeline.  Override with
-    ``REPRO_COMPILE_CONCURRENCY``.
+    ``REPRO_COMPILE_CONCURRENCY`` (declared in :mod:`repro.envvars`; a
+    malformed value warns and falls back rather than exploding at first
+    compile deep inside a worker thread).
     """
-    default = max(1, (os.cpu_count() or 2) // 2)
-    env = os.environ.get("REPRO_COMPILE_CONCURRENCY")
-    if env is None or not env.strip():
-        return default
-    try:
-        return max(1, int(env))
-    except ValueError:
-        # A typo'd value must not explode at first compile deep inside a
-        # worker thread — fall back loudly to the default instead.
-        warnings.warn(
-            f"ignoring malformed REPRO_COMPILE_CONCURRENCY={env!r} "
-            f"(expected an integer); using the default of {default}",
-            RuntimeWarning,
-            stacklevel=2,
-        )
-        return default
+    return read_env("REPRO_COMPILE_CONCURRENCY",
+                    max(1, (os.cpu_count() or 2) // 2))
 
 
 _gate_init_lock = threading.Lock()

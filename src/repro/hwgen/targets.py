@@ -7,7 +7,7 @@ mesh recipe and backend capabilities (for the reflection API, paper §VI).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,6 +36,21 @@ HOST_CPU = ChipSpec(
     hbm_bytes=32 * 1024 ** 3,
 )
 
+# Edge-class accelerator (the paper's Raspberry-Pi/Pico deployment tier):
+# a single-chip NPU with modest compute but *proportionally* even less
+# memory bandwidth than the datacenter parts — its roofline crosses over
+# at a much higher arithmetic intensity, so architectures that win on
+# tpu_v5e (compute-bound) can lose here (bandwidth-bound).  That
+# asymmetry is what makes cross-target sweep comparisons informative.
+EDGE_NPU = ChipSpec(
+    name="edge_npu",
+    peak_flops_bf16=4e12,
+    hbm_bandwidth=34e9,
+    ici_bandwidth=0.25e9,
+    hbm_bytes=8 * 1024 ** 3,
+    vmem_bytes=8 * 1024 * 1024,
+)
+
 
 @dataclasses.dataclass(frozen=True)
 class TargetSpec:
@@ -56,6 +71,35 @@ class TargetSpec:
             n *= s
         return n
 
+    @property
+    def mesh_scope(self) -> str:
+        """Identity of the *compiled program* this target produces.
+
+        Two targets sharing a mesh topology compile byte-identical
+        executables — chip constants only enter the roofline arithmetic
+        afterwards — so compile-derived cache entries are scoped by this
+        string instead of the target name, letting cross-target sweeps
+        reuse each other's compiles (see ``_CompiledEstimator``).
+        """
+        return ("mesh:" + "x".join(str(s) for s in self.mesh_shape)
+                + ":" + ",".join(self.mesh_axes))
+
+    def to_dict(self) -> Dict[str, Any]:
+        """JSON form with the full chip constants, persisted into
+        ``ExplorationReport``/``SweepReport`` so a report stays
+        interpretable even after a target's registered constants are
+        edited (the numbers that produced it travel with it)."""
+        return {
+            "name": self.name,
+            "chip": dataclasses.asdict(self.chip),
+            "mesh_shape": list(self.mesh_shape),
+            "mesh_axes": list(self.mesh_axes),
+            "n_chips": self.n_chips,
+            "supported_ops": sorted(self.supported_ops),
+            "supports_pallas": self.supports_pallas,
+            "measurement": self.measurement,
+        }
+
 
 _COMMON_OPS = frozenset({
     "linear", "conv1d", "maxpool", "avgpool", "identity", "global_avg_pool",
@@ -63,6 +107,15 @@ _COMMON_OPS = frozenset({
 })
 
 TARGETS: Dict[str, TargetSpec] = {
+    # single-chip tpu_v5e: the datacenter chip constants on a mesh any
+    # host can compile for (the pod targets need 256+ spoofed devices) —
+    # what cross-target sweeps compare against host_cpu/edge_npu
+    "tpu_v5e": TargetSpec(
+        name="tpu_v5e", chip=TPU_V5E,
+        mesh_shape=(1, 1), mesh_axes=("data", "model"),
+        supported_ops=_COMMON_OPS, supports_pallas=True,
+        measurement="roofline",
+    ),
     "tpu_v5e_pod": TargetSpec(
         name="tpu_v5e_pod", chip=TPU_V5E,
         mesh_shape=(16, 16), mesh_axes=("data", "model"),
@@ -80,6 +133,16 @@ TARGETS: Dict[str, TargetSpec] = {
         mesh_shape=(1, 1), mesh_axes=("data", "model"),
         supported_ops=_COMMON_OPS, supports_pallas=False,
         measurement="wallclock",
+    ),
+    # single-chip edge deployment tier: same mesh topology as host_cpu
+    # (so sweeps reuse its compiles) but roofline-measured against the
+    # EDGE_NPU constants — latency/memory trade-offs rank differently
+    # than on either datacenter target
+    "edge_npu": TargetSpec(
+        name="edge_npu", chip=EDGE_NPU,
+        mesh_shape=(1, 1), mesh_axes=("data", "model"),
+        supported_ops=_COMMON_OPS, supports_pallas=False,
+        measurement="roofline",
     ),
 }
 

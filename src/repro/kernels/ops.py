@@ -7,21 +7,20 @@ the interpreter on non-TPU backends — how this container validates them).
 from __future__ import annotations
 
 import functools
-import os
 
 import jax
 import jax.numpy as jnp
 
+from repro.envvars import read_env
 from repro.kernels.flash_attention import flash_attention_bhsd
 from repro.kernels.mlstm_scan import mlstm_scan_blhp
 from repro.kernels.ssm_scan import ssm_scan_blhp
 
 
 def _interpret() -> bool:
-    env = os.environ.get("REPRO_PALLAS_INTERPRET")
-    if env is not None:
-        return env not in ("0", "false")
-    return jax.default_backend() != "tpu"
+    # REPRO_PALLAS_INTERPRET is declared in repro.envvars (the shared
+    # REPRO_* registry); unset falls back to backend detection
+    return read_env("REPRO_PALLAS_INTERPRET", jax.default_backend() != "tpu")
 
 
 def _pad_seq(x, block, axis):

@@ -1,0 +1,480 @@
+"""Sweep engine: expansion (cross product, dotted-key overrides, axis
+validation), per-cell resume, merge determinism, standalone-cell parity,
+target-constants round-trip, and the docs generator."""
+import copy
+import json
+import os
+
+import pytest
+import yaml
+
+from repro import Explorer, SweepError, SweepSpec, run_sweep
+from repro.explorer.sweep import _axis_label, _set_dotted, merge_reports
+
+TINY_SPACE = {
+    "input": [2, 64],
+    "output": 3,
+    "sequence": [
+        {"block": "features", "op_candidates": "conv1d",
+         "conv1d": {"kernel_size": [3, 5], "out_channels": [4, 8]}},
+        {"block": "head", "op_candidates": "linear",
+         "linear": {"width": [8, 16]}},
+    ],
+}
+
+BASE = {
+    "name": "tiny",
+    "search_space": TINY_SPACE,
+    "sampler": {"name": "random", "seed": 0},
+    "executor": {"backend": "serial"},
+    "criteria": [
+        {"estimator": "flops", "kind": "objective", "weight": 1.0},
+        {"estimator": "n_params", "kind": "objective", "weight": 0.1},
+    ],
+    "budget": {"n_trials": 6},
+}
+
+
+def make_sweep(tmp_path, **overrides):
+    raw = {
+        "name": "tiny-sweep",
+        "base": copy.deepcopy(BASE),
+        "axes": {
+            "targets": ["host_cpu", "edge_npu"],
+            "samplers": [{"name": "random", "seed": 0},
+                         {"name": "grid", "seed": 0}],
+        },
+        "report_dir": str(tmp_path / "results"),
+    }
+    raw.update(overrides)
+    return raw
+
+
+# ---------------------------------------------------------------------------
+# expansion
+# ---------------------------------------------------------------------------
+
+def test_expand_cross_product_order_and_overrides(tmp_path):
+    spec = SweepSpec.from_dict(make_sweep(tmp_path))
+    cells = spec.expand()
+    assert len(cells) == 4
+    # axes expand in declaration order: target-major, sampler-minor
+    assert [c.axes for c in cells] == [
+        {"target": "host_cpu", "sampler": "random-seed0"},
+        {"target": "host_cpu", "sampler": "grid-seed0"},
+        {"target": "edge_npu", "sampler": "random-seed0"},
+        {"target": "edge_npu", "sampler": "grid-seed0"},
+    ]
+    assert cells[0].spec.target == "host_cpu" and cells[0].spec.sampler.name == "random"
+    assert cells[3].spec.target == "edge_npu" and cells[3].spec.sampler.name == "grid"
+    # cell names are unique, deterministic, and filesystem-safe
+    names = [c.name for c in cells]
+    assert len(set(names)) == 4
+    assert all("/" not in n and " " not in n for n in names)
+    # every cell reports into the sweep's cell directory
+    assert all(c.spec.report_dir == spec.cells_dir for c in cells)
+
+
+def test_expand_dotted_key_axis(tmp_path):
+    raw = make_sweep(tmp_path)
+    raw["axes"]["budget.n_trials"] = [2, 4]
+    cells = SweepSpec.from_dict(raw).expand()
+    assert len(cells) == 8
+    assert sorted({c.spec.budget.n_trials for c in cells}) == [2, 4]
+    # the dotted override only touches its leaf
+    assert all(c.spec.budget.timeout_s is None for c in cells)
+
+
+def test_sweep_cache_forced_into_every_cell(tmp_path):
+    raw = make_sweep(tmp_path, cache=str(tmp_path / "store"))
+    cells = SweepSpec.from_dict(raw).expand()
+    assert all(c.spec.cache.dir == str(tmp_path / "store") for c in cells)
+    # booleans take the experiment-level shorthand, not str(True)/"False"
+    from repro.evaluation.disk_cache import DEFAULT_DIR
+
+    assert SweepSpec.from_dict(make_sweep(tmp_path, cache=True)).cache == DEFAULT_DIR
+    assert SweepSpec.from_dict(make_sweep(tmp_path, cache=False)).cache is None
+
+
+def test_expand_overrides_beat_whole_section_axes(tmp_path):
+    """The CLI's shrink knobs apply after axis values, so even a
+    whole-section `budget:`/`executor:` axis cannot defeat --trials."""
+    raw = make_sweep(tmp_path)
+    raw["axes"] = {"budget": [{"n_trials": 50}, {"n_trials": 60}],
+                   "executor": [{"backend": "serial", "n_workers": 8}]}
+    spec = SweepSpec.from_dict(raw)
+    cells = spec.expand({"budget.n_trials": 2, "executor.n_workers": 1})
+    assert [c.spec.budget.n_trials for c in cells] == [2, 2]
+    assert [c.spec.executor.n_workers for c in cells] == [1, 1]
+    # without overrides the axes stand
+    assert [c.spec.budget.n_trials for c in spec.expand()] == [50, 60]
+
+
+def test_axis_validation_names_the_bad_axis(tmp_path):
+    # unknown experiment key as an axis head
+    raw = make_sweep(tmp_path)
+    raw["axes"]["samplerz"] = ["random"]
+    with pytest.raises(SweepError, match="samplerz"):
+        SweepSpec.from_dict(raw)
+    # non-sweepable axis
+    raw = make_sweep(tmp_path)
+    raw["axes"]["name"] = ["a", "b"]
+    with pytest.raises(SweepError, match="name.*not sweepable"):
+        SweepSpec.from_dict(raw)
+    # empty value list
+    raw = make_sweep(tmp_path)
+    raw["axes"]["target"] = []
+    with pytest.raises(SweepError, match="target.*non-empty"):
+        SweepSpec.from_dict(raw)
+    # a bad VALUE surfaces at expand() naming the whole cell coordinates
+    raw = make_sweep(tmp_path)
+    raw["axes"]["targets"] = ["host_cpu", "warp_core"]
+    with pytest.raises(SweepError) as e:
+        SweepSpec.from_dict(raw).expand()
+    msg = str(e.value)
+    assert "target=warp_core" in msg and "host_cpu" in msg  # alternatives listed
+
+
+def test_unknown_sweep_key_and_missing_base(tmp_path):
+    raw = make_sweep(tmp_path)
+    raw["bases"] = raw.pop("base")
+    with pytest.raises(SweepError, match="bases"):
+        SweepSpec.from_dict(raw)
+    with pytest.raises(SweepError, match="base"):
+        SweepSpec.from_dict({"name": "x", "axes": {"target": ["host_cpu"]}})
+
+
+def test_base_file_ref_resolves_and_inlines(tmp_path):
+    (tmp_path / "exp.yaml").write_text(yaml.safe_dump(copy.deepcopy(BASE)))
+    raw = make_sweep(tmp_path, base={"file": "exp.yaml"})
+    path = tmp_path / "sweep.yaml"
+    path.write_text(yaml.safe_dump(raw))
+    spec = SweepSpec.from_yaml(str(path))
+    assert spec.base["search_space"]["input"] == [2, 64]
+    assert spec.to_dict()["base"]["name"] == "tiny"
+
+
+def test_set_dotted_and_axis_labels():
+    doc = {"budget": {"n_trials": 5}}
+    _set_dotted(doc, "budget.n_trials", 9)
+    _set_dotted(doc, "schedule.mode", "batch")
+    assert doc == {"budget": {"n_trials": 9}, "schedule": {"mode": "batch"}}
+    with pytest.raises(SweepError, match="descends through"):
+        _set_dotted({"budget": 5}, "budget.n_trials", 9)
+    assert _axis_label("host_cpu") == "host_cpu"
+    assert _axis_label({"name": "tpe", "seed": 3}) == "tpe-seed3"
+    assert _axis_label({"mode": "sliding_window"}) == "sliding_window"
+    # distinct option sets may never collide on one label
+    assert (_axis_label({"name": "tpe", "seed": 1})
+            != _axis_label({"name": "tpe", "seed": 2}))
+
+
+# ---------------------------------------------------------------------------
+# running: parity, resume, determinism
+# ---------------------------------------------------------------------------
+
+def test_cell_best_matches_standalone_explorer(tmp_path):
+    """A sweep adds comparison, not a different engine: each cell's best
+    trial must be identical to running the child spec standalone."""
+    spec = SweepSpec.from_dict(make_sweep(tmp_path))
+    report = run_sweep(spec, save_report=False)
+    assert report.n_cells == 4 and report.n_resumed == 0
+    for cell, summary in zip(spec.expand(), report.cells):
+        standalone = Explorer.from_spec(cell.spec).run(save_report=False)
+        assert summary["best"]["number"] == standalone.best["number"]
+        assert summary["best"]["values"] == standalone.best["values"]
+        assert summary["best"]["params"] == standalone.best["params"]
+
+
+def test_sweep_resume_skips_completed_cells(tmp_path):
+    spec = SweepSpec.from_dict(make_sweep(tmp_path))
+    first = run_sweep(spec)
+    assert first.n_resumed == 0
+    assert os.path.exists(first.artifact)
+
+    # a full re-run resumes everything and reproduces the merge
+    second = run_sweep(spec)
+    assert second.n_resumed == 4
+    assert second.matrix == first.matrix
+    assert [c["best"] for c in second.cells] == [c["best"] for c in first.cells]
+
+    # killing one cell re-runs exactly that cell
+    victim = spec.expand()[2]
+    os.remove(victim.report_path)
+    third = run_sweep(spec)
+    assert third.n_resumed == 3
+    resumed = {c["name"]: c["resumed"] for c in third.cells}
+    assert resumed[victim.name] is False
+    assert sum(not r for r in resumed.values()) == 1
+    assert third.matrix == first.matrix
+
+    # editing the base spec invalidates every cell (spec fingerprint)
+    spec.base["budget"]["n_trials"] = 4
+    fourth = run_sweep(spec)
+    assert fourth.n_resumed == 0
+
+
+def test_sweep_report_merge_deterministic(tmp_path):
+    r1 = run_sweep(SweepSpec.from_dict(make_sweep(tmp_path / "a")),
+                   save_report=False)
+    r2 = run_sweep(SweepSpec.from_dict(make_sweep(tmp_path / "b")),
+                   save_report=False)
+    d1, d2 = r1.to_dict(), r2.to_dict()
+    # everything but wall clock and file paths must be bit-identical
+    for d in (d1, d2):
+        d.pop("wall_clock_s")
+        d["spec"].pop("report_dir")
+        for cell in d["cells"]:
+            cell.pop("wall_clock_s")
+            cell.pop("artifact")
+            cell.pop("cache")  # absent under serial in-memory runs anyway
+    assert json.dumps(d1, sort_keys=True) == json.dumps(d2, sort_keys=True)
+
+
+def test_sweep_report_views(tmp_path):
+    spec = SweepSpec.from_dict(make_sweep(tmp_path))
+    report = run_sweep(spec, save_report=False)
+    # per-criterion matrix: target rows x sampler columns
+    assert set(report.matrix) == {"flops", "n_params"}
+    grid = report.matrix["flops"]
+    assert set(grid) == {"host_cpu", "edge_npu"}
+    assert set(grid["host_cpu"]) == {"random-seed0", "grid-seed0"}
+    assert all(isinstance(v, float) for row in grid.values() for v in row.values())
+    # pareto union: tagged, non-dominated across every cell
+    assert report.pareto_union
+    for entry in report.pareto_union:
+        assert entry["target"] in ("host_cpu", "edge_npu")
+        assert len(entry["objective_values"]) == 2
+    # rankings cover each criterion plus the declared weighting
+    assert set(report.target_rankings) == {"flops", "n_params", "declared_weights"}
+    for ranked in report.target_rankings.values():
+        assert [r["target"] for r in ranked]  # non-empty, ordered
+        values = [r["value"] for r in ranked]
+        assert values == sorted(values)  # minimize criteria -> ascending
+
+
+def test_merge_reports_is_pure(tmp_path):
+    """merge_reports over the same summaries is deterministic and does
+    not mutate its inputs (resumed merges must equal live merges)."""
+    spec = SweepSpec.from_dict(make_sweep(tmp_path))
+    report = run_sweep(spec)
+    summaries = copy.deepcopy(report.cells)
+    merged_a = merge_reports(spec, copy.deepcopy(summaries), 0, 1.0)
+    merged_b = merge_reports(spec, copy.deepcopy(summaries), 4, 2.0)
+    assert merged_a.matrix == report.matrix == merged_b.matrix
+    assert merged_a.pareto_union == report.pareto_union
+    assert merged_a.target_rankings == report.target_rankings
+
+
+def test_sweep_artifact_round_trips(tmp_path):
+    spec = SweepSpec.from_dict(make_sweep(tmp_path))
+    report = run_sweep(spec)
+    with open(report.artifact) as f:
+        persisted = json.load(f)
+    assert persisted["sweep"] == "tiny-sweep"
+    assert persisted["matrix"] == report.matrix
+    assert persisted["spec"]["axes"]["target"] == ["host_cpu", "edge_npu"]
+    assert persisted["artifact"] == report.artifact
+
+
+# ---------------------------------------------------------------------------
+# bugfix: reports persist the full target constants
+# ---------------------------------------------------------------------------
+
+def test_report_persists_full_target_constants(tmp_path):
+    from repro.explorer.registry import TARGETS
+
+    raw = copy.deepcopy(BASE)
+    raw["target"] = "edge_npu"
+    raw["report_dir"] = str(tmp_path / "results")
+    report = Explorer.from_dict(raw).run()
+    expected = TARGETS.get("edge_npu").to_dict()
+    assert report.target == expected
+    assert report.target["chip"]["peak_flops_bf16"] == 4e12
+    assert report.target["chip"]["hbm_bandwidth"] == 34e9
+    # round-trip through the JSON artifact
+    with open(report.artifact) as f:
+        persisted = json.load(f)
+    assert persisted["target"] == expected
+    assert persisted["spec"] == report.spec  # report self-describes
+
+
+def test_sweep_cells_carry_their_targets(tmp_path):
+    report = run_sweep(SweepSpec.from_dict(make_sweep(tmp_path)),
+                       save_report=False)
+    by_axis = {c["axes"]["target"]: c["target"] for c in report.cells}
+    assert by_axis["host_cpu"]["chip"]["name"] == "host_cpu"
+    assert by_axis["edge_npu"]["chip"]["name"] == "edge_npu"
+    assert (by_axis["edge_npu"]["chip"]["peak_flops_bf16"]
+            != by_axis["host_cpu"]["chip"]["peak_flops_bf16"])
+
+
+# ---------------------------------------------------------------------------
+# cache plumbing: compile-derived values are scoped by mesh topology
+# ---------------------------------------------------------------------------
+
+def test_cross_target_cache_reuse_zero_compiles(tmp_path):
+    """Targets sharing a mesh topology share compiles: the second
+    target's modelled latency comes from the cached roofline terms
+    (chip constants applied after the fact) and peak bytes from the
+    cached memory analysis — zero new XLA compiles, yet chip-dependent
+    values still differ per target."""
+    from repro.core.builder import ModelBuilder
+    from repro.core.space import parse_search_space
+    from repro.core.translate import sample_architecture
+    from repro.evaluation import (
+        CompiledLatencyEstimator,
+        CompiledMemoryEstimator,
+        EvaluationCache,
+    )
+    from repro.hwgen.generator import generate_call_count
+    from repro.search import RandomSampler, Study
+
+    space = parse_search_space(dict(TINY_SPACE))
+    builder = ModelBuilder(space.input_shape, space.output_dim)
+    model = builder.build(sample_architecture(space, Study(
+        sampler=RandomSampler(seed=0)).ask()))
+
+    cache = EvaluationCache(disk=str(tmp_path / "store"))
+    c0 = generate_call_count()
+    host_lat = CompiledLatencyEstimator("host_cpu", batch=2, cache=cache,
+                                        metric="modelled").estimate(model)
+    host_mem = CompiledMemoryEstimator("host_cpu", batch=2,
+                                       cache=cache).estimate(model)
+    compiled_once = generate_call_count()
+    assert compiled_once == c0 + 1  # latency + memory share one artifact
+
+    for other in ("edge_npu", "tpu_v5e"):
+        lat = CompiledLatencyEstimator(other, batch=2, cache=cache,
+                                       metric="modelled").estimate(model)
+        mem = CompiledMemoryEstimator(other, batch=2, cache=cache).estimate(model)
+        assert generate_call_count() == compiled_once  # ZERO new compiles
+        assert lat != host_lat     # chip constants still apply per target
+        assert mem == host_mem     # memory analysis is chip-independent
+
+    # a *different* mesh topology must NOT alias (distinct program)
+    from repro.evaluation.cache import EvaluationCache as EC
+    host = CompiledLatencyEstimator("host_cpu", batch=2, cache=cache,
+                                    metric="modelled")
+    pod = CompiledLatencyEstimator("tpu_v5e_pod", batch=2, cache=cache,
+                                   metric="modelled")
+    assert (host._program_key("roofline_terms", model)
+            != pod._program_key("roofline_terms", model))
+    assert EC.candidate_key(model) in str(host._program_key("artifact", model))
+
+
+def test_shared_artifact_rebinds_to_requesting_target(tmp_path):
+    """A cached artifact compiled by a sibling same-topology target must
+    be re-bound before use: measurement dispatch and roofline constants
+    follow the REQUESTING estimator's target, not whoever compiled
+    first."""
+    import pytest as _pytest
+
+    from repro.core.builder import ModelBuilder
+    from repro.core.space import parse_search_space
+    from repro.core.translate import sample_architecture
+    from repro.evaluation import (
+        CompiledLatencyEstimator,
+        CompiledMemoryEstimator,
+        EvaluationCache,
+    )
+    from repro.hwgen.generator import generate_call_count
+    from repro.search import RandomSampler, Study
+
+    space = parse_search_space(dict(TINY_SPACE))
+    builder = ModelBuilder(space.input_shape, space.output_dim)
+    model = builder.build(sample_architecture(space, Study(
+        sampler=RandomSampler(seed=0)).ask()))
+    cache = EvaluationCache()
+
+    # host_cpu pays the compile; the artifact in the cache carries host_cpu
+    CompiledMemoryEstimator("host_cpu", batch=2, cache=cache).estimate(model)
+    c0 = generate_call_count()
+
+    # tpu_v5e measurement="roofline": benchmark() must return the TPU
+    # roofline bound, not wall-clock the host (host_cpu's measurement)
+    measured = CompiledLatencyEstimator("tpu_v5e", batch=2, cache=cache,
+                                        metric="measured").estimate(model)
+    modelled = CompiledLatencyEstimator("tpu_v5e", batch=2, cache=cache,
+                                        metric="modelled").estimate(model)
+    assert generate_call_count() == c0  # still zero extra compiles
+    assert measured == _pytest.approx(modelled)
+
+    # and the rebound artifact reports the requesting target's chip
+    est = CompiledLatencyEstimator("tpu_v5e", batch=2, cache=cache)
+    artifact, _ = est._artifact(model)
+    assert artifact.target.name == "tpu_v5e"
+    assert artifact.roofline.bound_s == _pytest.approx(modelled)
+
+
+# ---------------------------------------------------------------------------
+# docs generator
+# ---------------------------------------------------------------------------
+
+def test_gen_docs_covers_every_registered_component():
+    from repro.explorer.docgen import (
+        components_markdown,
+        list_components_text,
+        walk_components,
+    )
+    from repro.explorer.registry import REGISTRIES
+
+    rendered = components_markdown()
+    listed = list_components_text()
+    walked = walk_components()
+    for kind, registry in REGISTRIES.items():
+        names = registry.names()
+        assert names, f"registry {kind} is empty"
+        assert [e["name"] for e in walked[kind]] == names
+        for name in names:
+            assert f"`{name}`" in rendered
+            assert name in listed
+    # the new builtins specifically
+    assert "`edge_npu`" in rendered and "`tpu_v5e`" in rendered
+
+
+def test_gen_docs_spec_reference_covers_every_key():
+    from repro.explorer.docgen import experiment_spec_markdown
+    from repro.explorer.experiment import TOP_LEVEL_KEYS
+    from repro.explorer.sweep import SWEEP_KEYS
+
+    rendered = experiment_spec_markdown()
+    for key in TOP_LEVEL_KEYS:
+        assert f"`{key}`" in rendered
+    for key in SWEEP_KEYS:
+        assert f"`{key}`" in rendered
+    for section in ("sampler", "executor", "schedule", "criteria[i]",
+                    "cache", "budget", "pruner", "Sweep document"):
+        assert section in rendered
+
+
+def test_gen_docs_env_reference_covers_every_env_var():
+    from repro.envvars import ENV_VARS
+    from repro.explorer.docgen import env_markdown
+
+    rendered = env_markdown()
+    assert ENV_VARS  # the registry is populated at import
+    for name, var in ENV_VARS.items():
+        assert f"`{name}`" in rendered
+        assert var.default in rendered
+        assert var.malformed in rendered
+
+
+def test_env_registry_rejects_unregistered_reads_and_falls_back():
+    import warnings
+
+    from repro.envvars import read_env
+
+    with pytest.raises(KeyError, match="REPRO_NOT_A_KNOB"):
+        read_env("REPRO_NOT_A_KNOB", 1)
+    # malformed registered value: warn + default (never raise)
+    os.environ["REPRO_CACHE_MAX_ENTRIES"] = "banana"
+    try:
+        with pytest.warns(RuntimeWarning, match="REPRO_CACHE_MAX_ENTRIES"):
+            assert read_env("REPRO_CACHE_MAX_ENTRIES", None) is None
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            os.environ["REPRO_CACHE_MAX_ENTRIES"] = "12"
+            assert read_env("REPRO_CACHE_MAX_ENTRIES", None) == 12
+    finally:
+        del os.environ["REPRO_CACHE_MAX_ENTRIES"]
