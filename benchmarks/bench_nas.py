@@ -639,6 +639,196 @@ def bench_sweep_engine() -> None:
 
 
 # ---------------------------------------------------------------------------
+# cascade group: zero-cost screening vs flat compiled evaluation at the
+# SAME trial budget and seed — the multi-fidelity cascade's whole value
+# proposition is that screened-out candidates never pay an XLA compile
+# ---------------------------------------------------------------------------
+
+CASCADE_TRIALS, CASCADE_SEED, CASCADE_GENERATION = 64, 11, 16
+
+# Deep-thin models: the regime where screening pays.  Many layers make
+# the XLA compile expensive (graph-size-bound) while tiny channel counts
+# keep the eager zero-cost proxy cheap (dispatch-bound, per-op kernels
+# shared across the few distinct layer shapes).  The depth axis is
+# bimodal on purpose: per-layer parameter sampling makes the deep
+# candidates pairwise-unique (the flat baseline compiles every one of
+# them), but the depth-1 low-capacity corner the synflow-minimize screen
+# promotes from is small AND cheap to compile — the cascade pays a few
+# small compiles where the baseline pays dozens of big ones.
+CASCADE_SPACE_YAML = """
+input: [4, 128]
+output: 6
+sequence:
+  - block: "features"
+    op_candidates: "conv1d"
+    type_repeat:
+      type: "repeat_op"
+      depth: [1, 32, 48, 64]
+    conv1d:
+      kernel_size: [3, 5]
+      out_channels: [4, 8]
+      stride: [1]
+  - block: "head"
+    op_candidates: "linear"
+    linear:
+      width: [16, 32]
+"""
+
+
+def _cascade_spec(with_screen: bool, trials: int) -> dict:
+    """Experiment dict for the cascade comparison.  Both configurations
+    ask the IDENTICAL trial sequence (same sampler seed; the per-trial
+    RNG streams key on the trial number, and the cascade pre-samples the
+    same suggestions in-parent), so the flat run's best trial either
+    survives the screen — and then the cascade must find it too — or was
+    screened out, which the benchmark reports instead of hiding.  The
+    synflow screen runs with ``direction: minimize`` because the final
+    objective minimizes modelled latency: low-capacity candidates are
+    the fast ones, so proxy rank and final rank point the same way."""
+    import yaml as _yaml
+
+    spec = {
+        "name": f"bench-cascade-{'screen' if with_screen else 'flat'}",
+        "search_space": _yaml.safe_load(CASCADE_SPACE_YAML),
+        "sampler": {"name": "random", "seed": CASCADE_SEED},
+        "executor": {"backend": "serial"},
+        "criteria": [
+            {"estimator": "latency_s", "kind": "objective",
+             "params": {"batch": 4, "metric": "modelled"}},
+        ],
+        "budget": {"n_trials": trials},
+    }
+    if with_screen:
+        spec["fidelity"] = {
+            "generation": CASCADE_GENERATION,
+            "stages": [
+                {"name": "zero_cost",
+                 "criteria": [{"estimator": "synflow", "kind": "objective",
+                               "direction": "minimize"}],
+                 "keep": {"top_frac": 0.25}},
+            ],
+        }
+    return spec
+
+
+def _warm_cascade_process() -> None:
+    """One build + proxy + compile OUTSIDE the timed window (both
+    configurations, identically): first-touch JAX backend init and the
+    eager per-op kernel compiles are one-time process costs, not
+    screening throughput.  Uses its own estimator instances, so nothing
+    lands in the measured run's evaluation cache."""
+    import yaml as _yaml
+
+    from repro.core.builder import ModelBuilder
+    from repro.core.space import parse_search_space
+    from repro.core.translate import sample_architecture
+    from repro.evaluation.estimators import CompiledLatencyEstimator
+    from repro.evaluation.proxies import SynFlowEstimator
+    from repro.search.samplers import RandomSampler
+    from repro.search.study import Study
+
+    space = parse_search_space(_yaml.safe_load(CASCADE_SPACE_YAML))
+    study = Study(sampler=RandomSampler(seed=997))
+    builder = ModelBuilder(space.input_shape, space.output_dim)
+    syn = SynFlowEstimator()
+    lat = CompiledLatencyEstimator("host_cpu", batch=4, metric="modelled")
+    for _ in range(2):
+        model = builder.build(sample_architecture(space, study.ask()))
+        syn.estimate(model)
+        lat.estimate(model)
+
+
+def run_cascade_config(name: str, trials: int = CASCADE_TRIALS) -> dict:
+    """Run ONE cascade configuration (fresh process — same in-process XLA
+    cache reasoning as run_parallel_config) and return its measurements."""
+    from repro.explorer import Explorer
+    from repro.hwgen.generator import generate_call_count
+
+    with_screen = name == "cascade"
+    _warm_cascade_process()
+    base_compiles = generate_call_count()
+    explorer = Explorer.from_dict(_cascade_spec(with_screen, trials))
+    t0 = time.perf_counter()
+    report = explorer.run(save_report=False)
+    seconds = time.perf_counter() - t0
+    out = {
+        "name": name,
+        "seconds": seconds,
+        "compiles": generate_call_count() - base_compiles,
+        "best_number": report.best["number"],
+        "best_value": report.best["values"][0],
+        "states": report.states,
+    }
+    if with_screen:
+        out["funnel"] = report.fidelity["funnel"]
+        out["spearman"] = report.fidelity["spearman"]
+        out["promoted_numbers"] = [
+            t.number for t in explorer.study.trials
+            if t.user_attrs.get("fidelity_stage") == "promoted"]
+    return out
+
+
+def _run_cascade_subprocess(name: str, trials: int) -> dict:
+    import json
+    import os
+    import subprocess
+    import sys
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = {**os.environ}
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(repo, "src"), repo] + env.get("PYTHONPATH", "").split(os.pathsep))
+    cmd = [sys.executable, os.path.abspath(__file__), "--cascade-config",
+           name, str(trials)]
+    r = subprocess.run(cmd, capture_output=True, text=True, env=env, timeout=1800)
+    if r.returncode != 0:
+        raise RuntimeError(f"cascade config {name!r} failed:\n{r.stderr[-4000:]}")
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+def bench_cascade(quick: bool = False) -> None:
+    """Flat compiled evaluation vs the zero-cost -> compiled cascade at
+    the same budget/seed on the compile-bound modelled-latency objective.
+
+    What must hold: (1) candidates evaluated per unit wall-clock goes up
+    by >= 4x — the screen pays milliseconds of eager proxy math to skip
+    75% of the compiles, and concentrates the survivors on few unique
+    (cached) architectures; (2) screened-out candidates never compile,
+    so the cascade's total compile count stays <= its promoted count;
+    (3) the flat run's winner, when it survives the screen, is exactly
+    the cascade's winner (`best_match`)."""
+    trials = 32 if quick else CASCADE_TRIALS
+    flat = _run_cascade_subprocess("nocascade", trials)
+    casc = _run_cascade_subprocess("cascade", trials)
+    throughput = flat["seconds"] / casc["seconds"]
+    funnel = casc["funnel"]
+    screened_compiles_zero = casc["compiles"] <= funnel["promoted"]
+    winner_survived = flat["best_number"] in casc["promoted_numbers"]
+    best_match = (not winner_survived) or (
+        casc["best_number"] == flat["best_number"]
+        and casc["best_value"] == flat["best_value"])
+    if not screened_compiles_zero:
+        raise AssertionError(
+            f"screened-out candidates compiled: {casc['compiles']} compiles "
+            f"for {funnel['promoted']} promotions")
+    if not best_match:
+        raise AssertionError(
+            f"flat winner {flat['best_number']} survived the screen but the "
+            f"cascade best is {casc['best_number']} — fixed-seed runs must "
+            f"agree when the winner is promoted")
+    rho = casc["spearman"].get("zero_cost")
+    emit("cascade/flat", flat["seconds"] / trials,
+         f"compiles={flat['compiles']};best={flat['best_value']:.3e}")
+    emit("cascade/screened", casc["seconds"] / trials,
+         f"throughput_vs_flat={throughput:.2f}x;"
+         f"compiles={casc['compiles']};"
+         f"promoted={funnel['promoted']};screened={funnel['screened']};"
+         f"screened_compiles_zero={screened_compiles_zero};"
+         f"winner_survived={winner_survived};best_match={best_match};"
+         f"spearman={rho if rho is None else round(rho, 2)}")
+
+
+# ---------------------------------------------------------------------------
 # async scheduler group: sliding window vs batch barrier on a
 # latency-skewed objective (the regime hardware-in-the-loop NAS lives in)
 # ---------------------------------------------------------------------------
@@ -753,6 +943,7 @@ def main() -> None:
     bench_preprocessing_joint()
     bench_explorer_facade()
     bench_sweep_engine()
+    bench_cascade()
     bench_async_scheduler()
     bench_parallel_engine()
     bench_process_engine()
@@ -768,9 +959,15 @@ if __name__ == "__main__":
 
         print(json.dumps(run_parallel_config(
             sys.argv[2], sys.argv[3] if len(sys.argv) == 4 else None)))
+    elif len(sys.argv) == 4 and sys.argv[1] == "--cascade-config":
+        # subprocess mode for bench_cascade: emit one JSON line
+        import json
+
+        print(json.dumps(run_cascade_config(sys.argv[2], int(sys.argv[3]))))
     elif "--quick" in sys.argv[1:]:
-        # CI mode: just the async scheduler group, small sizes, so
-        # scheduler perf regressions surface in every PR log
+        # CI mode: the scheduler + cascade groups, small sizes, so
+        # scheduler and screening regressions surface in every PR log
         bench_async_scheduler(quick=True)
+        bench_cascade(quick=True)
     else:
         main()

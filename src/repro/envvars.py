@@ -147,6 +147,22 @@ register_env(EnvVar(
 ))
 
 register_env(EnvVar(
+    name="REPRO_PROXY_BATCH",
+    parse=_positive_int,
+    expected="a positive integer",
+    description=(
+        "Batch size for the zero-cost proxy estimators (`synflow`, "
+        "`grad_norm`) — one eager forward/backward per candidate, so "
+        "this bounds tier-0 screening cost in the fidelity cascade.  "
+        "Proxy scores are rankings, not costs; the default is small on "
+        "purpose.  An explicit `batch` estimator param wins over the "
+        "environment."),
+    default="2",
+    malformed="warns and uses the default",
+    consulted_by="`repro/evaluation/proxies.py`",
+))
+
+register_env(EnvVar(
     name="REPRO_DRYRUN_DIR",
     parse=str,
     expected="a directory path",

@@ -2,9 +2,16 @@ from repro.evaluation.api import (
     CriteriaRunner,
     Estimator,
     OptimizationCriteria,
+    constraint_violation,
     weighted_sum,
 )
 from repro.evaluation.cache import CacheStats, EvaluationCache
+from repro.evaluation.cascade import (
+    CascadeRunner,
+    CohortResult,
+    FidelityStage,
+    KeepRule,
+)
 from repro.evaluation.disk_cache import DiskEvaluationCache
 from repro.evaluation.estimators import (
     ActivationMemoryEstimator,
@@ -14,3 +21,4 @@ from repro.evaluation.estimators import (
     ParamCountEstimator,
     TrainedAccuracyEstimator,
 )
+from repro.evaluation.proxies import GradNormEstimator, SynFlowEstimator

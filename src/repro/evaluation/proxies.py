@@ -1,0 +1,164 @@
+"""Zero-cost proxy estimators: tier 0 of the fidelity cascade.
+
+One eager pass on the *uncompiled* :class:`BuiltModel` — no
+``jax.jit``, no :class:`~repro.hwgen.generator.XLAGenerator` — so a
+candidate screened out by a proxy never touches the XLA compiler
+(``generate_call_count()`` stays 0 for it).  The scores follow the
+standard zero-cost NAS proxies (Benmeziane et al., arXiv:2101.09336
+survey; Abdelfattah et al. "Zero-Cost Proxies for Lightweight NAS"):
+
+  * ``synflow``   — sum over parameters of ``|θ ⊙ ∂R/∂θ|`` where ``R``
+    is the summed output of the network run on an all-ones input with
+    absolute-valued weights; computed with a single forward pass via
+    the saliency-conservation identity (see
+    :class:`SynFlowEstimator`), reported on a log scale so the score
+    stays finite and JSON-serializable for arbitrarily deep candidates;
+  * ``grad_norm`` — the global l2 norm of the loss gradient from one
+    forward/backward on a fixed random batch.
+
+Both are *rankings*, not costs: a quality-seeking screen runs them with
+``direction: maximize`` (more trainable capacity survives), while a
+latency-minimizing search can invert the screen with ``direction:
+minimize`` — the cascade's keep rules rank the scalarized stage score
+either way.
+
+Scores are deterministic (fixed PRNG keys, fixed input) and memoized in
+the shared :class:`EvaluationCache` keyed by the candidate's full
+architecture signature + the proxy batch size, so they ride the same
+flock-safe disk tier as compiled costs and survive restarts.  The
+default batch comes from ``REPRO_PROXY_BATCH`` (see
+``docs/reference/env.md``).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.builder import BuiltModel
+from repro.envvars import read_env
+from repro.evaluation.api import Estimator
+from repro.evaluation.cache import EvaluationCache
+from repro.explorer.registry import ESTIMATORS
+
+# Small on purpose: a proxy exists to cost milliseconds next to a
+# multi-second compile, and the score is a ranking — batch size barely
+# moves it.  REPRO_PROXY_BATCH overrides for spaces whose first layers
+# are batch-sensitive.
+DEFAULT_PROXY_BATCH = 2
+
+
+class ZeroCostProxy(Estimator):
+    """Shared machinery: cache wiring + the eager input construction.
+
+    Subclasses implement ``_score(candidate) -> float``; ``estimate``
+    memoizes it under ``(name, batch, signature)`` — JSON-able, so the
+    disk tier persists proxy scores exactly like compiled costs.
+    """
+
+    def __init__(self, batch: Optional[int] = None,
+                 cache: Optional[EvaluationCache | str] = None):
+        if batch is None:
+            batch = read_env("REPRO_PROXY_BATCH", DEFAULT_PROXY_BATCH)
+        self.batch = max(1, int(batch))
+        if cache is None:
+            cache = EvaluationCache()
+        elif not isinstance(cache, EvaluationCache):
+            cache = EvaluationCache(disk=cache)
+        self.cache = cache
+
+    def _input(self, candidate: BuiltModel, fill: str) -> jnp.ndarray:
+        # mirror the compiled estimators: YAML input order is
+        # (channels, length), apply() wants (batch, length, channels)
+        l, c = candidate.input_shape[-1], candidate.input_shape[0]
+        shape = (self.batch, l, c)
+        if fill == "ones":
+            return jnp.ones(shape, jnp.float32)
+        return jax.random.normal(jax.random.PRNGKey(1), shape, jnp.float32)
+
+    @staticmethod
+    def _apply_net(candidate: BuiltModel, params, x):
+        # the layer stack only, WITHOUT the data-preprocessing stage:
+        # proxies measure architecture saliency, and a normalizer maps
+        # the synflow all-ones probe to a constant zero (zscore/minmax of
+        # a constant input), which would zero every proxy score
+        for i, layer in enumerate(candidate.layers):
+            x = layer.apply(params[f"layer_{i}"], x)
+        return x
+
+    def _score(self, candidate: BuiltModel) -> float:
+        raise NotImplementedError
+
+    def estimate(self, candidate: BuiltModel, context=None) -> float:
+        key = (self.name, self.batch, EvaluationCache.candidate_key(candidate))
+        return self.cache.get_or_compute(
+            key, lambda: float(self._score(candidate)))
+
+
+@ESTIMATORS.register("synflow")
+class SynFlowEstimator(ZeroCostProxy):
+    """Synaptic-flow saliency (log scale) via the conservation identity.
+
+    Synflow accumulates ``|θ ⊙ ∂R/∂θ|`` where ``R`` is the summed output
+    on an all-ones input with absolute-valued weights.  Tanaka et al.
+    (arXiv:2006.05467) prove layerwise saliency is *conserved*: with the
+    whole network positive (abs weights, positive input, ReLU/pooling
+    transparent) ``R`` is degree-1 homogeneous in each affine layer's
+    weights, so every parameterized layer's saliency sum equals ``R``
+    and the total is ``n_param_layers * R`` — one eager forward pass,
+    no autodiff.  Bias leaves are zeroed in the probe to keep the
+    identity exact (they are zero at init here anyway, so this matches
+    the backward-pass formulation bit for bit); the test suite checks
+    the identity against an autodiff reference."""
+
+    name = "synflow"
+
+    @staticmethod
+    def _probe_params(candidate: BuiltModel):
+        """|θ| with bias (1-D) leaves zeroed, plus the count of layers
+        that carry any parameters at all."""
+        params = candidate.init(jax.random.PRNGKey(0))
+        probe = jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p) if p.ndim == 1 else jnp.abs(p),
+            params)
+        n_param_layers = sum(
+            1 for layer in probe.values()
+            if jax.tree_util.tree_leaves(layer))
+        return probe, n_param_layers
+
+    def _score(self, candidate: BuiltModel) -> float:
+        x = self._input(candidate, "ones")
+        probe, n_param_layers = self._probe_params(candidate)
+        r = float(jnp.sum(self._apply_net(candidate, probe, x)))
+        total = n_param_layers * max(r, 0.0)
+        # log1p: raw synflow grows multiplicatively with depth/width and
+        # overflows float ranges for deep candidates; log keeps the
+        # ranking and stays strict-JSON-serializable on the disk tier
+        return math.log1p(total)
+
+
+@ESTIMATORS.register("grad_norm")
+class GradNormEstimator(ZeroCostProxy):
+    """Global l2 norm of the cross-entropy gradient from one
+    forward/backward on a fixed random batch with random labels."""
+
+    name = "grad_norm"
+
+    def _score(self, candidate: BuiltModel) -> float:
+        x = self._input(candidate, "normal")
+        y = jax.random.randint(jax.random.PRNGKey(2), (self.batch,), 0,
+                               max(1, candidate.output_dim))
+        params = candidate.init(jax.random.PRNGKey(0))
+
+        def loss(p):
+            logits = self._apply_net(candidate, p, x)
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+            return jnp.mean(logz - gold)
+
+        grads = jax.grad(loss)(params)
+        sq = sum(float(jnp.sum(g * g))
+                 for g in jax.tree_util.tree_leaves(grads))
+        return math.sqrt(max(sq, 0.0))

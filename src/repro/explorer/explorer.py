@@ -26,9 +26,10 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import math
 import os
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Sequence
 
 from repro.explorer.experiment import ExperimentError, ExperimentSpec
 from repro.explorer.registry import TARGETS
@@ -64,8 +65,11 @@ class SpecObjective:
             from repro.core.builder import ModelBuilder
             from repro.core.space import parse_search_space
             from repro.evaluation import (
+                CascadeRunner,
                 CriteriaRunner,
                 EvaluationCache,
+                FidelityStage,
+                KeepRule,
                 OptimizationCriteria,
             )
 
@@ -74,15 +78,27 @@ class SpecObjective:
             builder = ModelBuilder(space.input_shape, space.output_dim)
             cache = EvaluationCache(disk=spec.cache.dir)
             target = TARGETS.get(spec.target)
-            criteria = [
-                OptimizationCriteria(
+
+            def build_criterion(c):
+                return OptimizationCriteria(
                     c.build_estimator(target=target, cache=cache),
                     kind=c.kind, direction=c.direction,
                     weight=c.weight, limit=c.limit,
                 )
-                for c in spec.criteria
-            ]
-            runner = CriteriaRunner(criteria, cache=cache)
+
+            criteria = [build_criterion(c) for c in spec.criteria]
+            if spec.fidelity is not None:
+                # screening stages from the fidelity section, the
+                # top-level criteria as the implicit final stage
+                stages = [
+                    FidelityStage(s.name, [build_criterion(c) for c in s.criteria],
+                                  keep=KeepRule(**s.keep.to_dict()))
+                    for s in spec.fidelity.stages
+                ]
+                stages.append(FidelityStage("final", criteria))
+                runner = CascadeRunner(stages, cache=cache)
+            else:
+                runner = CriteriaRunner(criteria, cache=cache)
             state = _PROCESS_STATE[self._key] = (spec, space, builder, runner, cache)
         return state
 
@@ -98,8 +114,32 @@ class SpecObjective:
         _, space, builder, _, _ = self._state()
         return builder.build(sample_architecture(space, trial))
 
+    def screen_cohort(self, trials):
+        """Fidelity-cascade screen hook for ``ParallelStudy.optimize``:
+        sample each cohort trial's architecture *in the parent* (so the
+        distribution registry is complete before any worker runs), build
+        the uncompiled models, and let the cascade's screening stages
+        decide who gets promoted to the executor."""
+        from repro.core.translate import sample_architecture
+        from repro.search.parallel import ScreenDecision
+
+        _, space, builder, runner, _ = self._state()
+        models = []
+        for trial in trials:
+            arch = sample_architecture(space, trial)
+            trial.set_user_attr("signature", arch.signature())
+            models.append(builder.build(arch))
+        result = runner.screen_cohort(models, trials=trials)
+        return ScreenDecision(
+            promoted=[trials[i] for i in result.promoted],
+            screened=[(trials[i], stage) for i, stage in result.screened.items()],
+            infeasible=[(trials[i], stage, exc)
+                        for i, (stage, exc) in result.infeasible.items()],
+        )
+
     def __call__(self, trial):
         from repro.core.translate import sample_architecture
+        from repro.hwgen.generator import generate_call_count
 
         spec, space, builder, runner, cache = self._state()
         arch = sample_architecture(space, trial)
@@ -109,7 +149,11 @@ class SpecObjective:
             value = runner.evaluate(model, trial=trial)
         else:
             value = runner.evaluate_multi(model, trial=trial)
-        worker = {"pid": os.getpid(), **cache.stats.as_dict()}
+        # generates: cumulative XLA generator invocations in this process —
+        # the report's funnel aggregates it per pid to count how many
+        # candidates actually paid a compile (screened-out ones never do)
+        worker = {"pid": os.getpid(), "generates": generate_call_count(),
+                  **cache.stats.as_dict()}
         if cache.disk is not None:
             worker.update(cache.disk.stats())
         trial.set_user_attr("worker", worker)
@@ -139,6 +183,36 @@ def _aggregate_cache_stats(trials) -> Optional[Dict[str, Any]]:
     totals["hit_rate"] = (totals["hits"] + totals["disk_hits"]) / lookups if lookups else 0.0
     totals["n_workers_seen"] = len(per_pid)
     return totals
+
+
+def _spearman(xs: Sequence[float], ys: Sequence[float]) -> Optional[float]:
+    """Tie-aware (average-rank) Spearman rank correlation, pure python —
+    the report layer must not grow a scipy dependency.  Returns ``None``
+    when either side is constant (correlation undefined)."""
+
+    def ranks(vs: Sequence[float]) -> List[float]:
+        order = sorted(range(len(vs)), key=lambda i: vs[i])
+        out = [0.0] * len(vs)
+        i = 0
+        while i < len(order):
+            j = i
+            while j + 1 < len(order) and vs[order[j + 1]] == vs[order[i]]:
+                j += 1
+            avg = (i + j) / 2.0 + 1.0
+            for k in range(i, j + 1):
+                out[order[k]] = avg
+            i = j + 1
+        return out
+
+    rx, ry = ranks(list(xs)), ranks(list(ys))
+    n = len(rx)
+    mx, my = sum(rx) / n, sum(ry) / n
+    cov = sum((a - mx) * (b - my) for a, b in zip(rx, ry))
+    vx = sum((a - mx) ** 2 for a in rx)
+    vy = sum((b - my) ** 2 for b in ry)
+    if vx <= 0.0 or vy <= 0.0:
+        return None
+    return cov / math.sqrt(vx * vy)
 
 
 def _dominates(a: List[float], b: List[float], signs: List[float]) -> bool:
@@ -177,6 +251,10 @@ class ExplorationReport:
     cache: Optional[Dict[str, Any]]
     wall_clock_s: float
     toolchain: Dict[str, str]
+    # fidelity-cascade funnel (asked/screened/infeasible/promoted/compiled
+    # counts, per-stage cut counts, proxy-vs-final Spearman); None when
+    # the experiment has no fidelity section
+    fidelity: Optional[Dict[str, Any]] = None
     # full resolved TargetSpec (chip peak FLOPs/bandwidth, mesh, ...):
     # registered constants can be edited later, so the numbers that
     # actually produced this report must travel with it or cross-target
@@ -261,7 +339,11 @@ class Explorer:
             # batch of slow trials
             study.optimize(objective, remaining,
                            n_workers=spec.executor.n_workers,
-                           timeout_s=spec.budget.timeout_s)
+                           timeout_s=spec.budget.timeout_s,
+                           screen=(objective.screen_cohort
+                                   if spec.fidelity is not None else None),
+                           cohort=(spec.fidelity.generation
+                                   if spec.fidelity is not None else None))
         wall_clock = time.perf_counter() - t0
 
         report = self._build_report(wall_clock)
@@ -309,6 +391,65 @@ class Explorer:
         ]
         return [_trial_summary(t, vals) for t, vals in front]
 
+    def _fidelity_report(self) -> Optional[Dict[str, Any]]:
+        """Per-stage funnel + proxy-vs-final rank correlation.
+
+        ``compiled`` is how many XLA generator invocations the run paid
+        (per-pid max of the cumulative ``generates`` counter, summed
+        across workers — same discipline as the cache aggregation): with
+        a warm cache it is *below* the promoted count, and screened-out
+        candidates never contribute.  ``spearman`` correlates each
+        screening stage's scalarized score with the final scalarized
+        value over trials that completed the full evaluation — the
+        proxy-quality number the cascade's keep rules implicitly bet on."""
+        from repro.evaluation.cascade import STAGE_SCORE_ATTR
+        from repro.search.trial import TrialState
+
+        spec, study = self.spec, self.study
+        if spec.fidelity is None:
+            return None
+        screened_by_stage: Dict[str, int] = {}
+        infeasible_by_stage: Dict[str, int] = {}
+        promoted = 0
+        for t in study.trials:
+            stage = t.user_attrs.get("fidelity_stage")
+            if stage is None:
+                continue
+            if stage == "promoted":
+                promoted += 1
+            elif t.state == TrialState.SCREENED:
+                screened_by_stage[stage] = screened_by_stage.get(stage, 0) + 1
+            elif t.state == TrialState.INFEASIBLE:
+                infeasible_by_stage[stage] = infeasible_by_stage.get(stage, 0) + 1
+        per_pid: Dict[int, int] = {}
+        for t in study.trials:
+            w = t.user_attrs.get("worker")
+            if isinstance(w, dict) and "pid" in w:
+                per_pid[w["pid"]] = max(per_pid.get(w["pid"], 0),
+                                        int(w.get("generates", 0)))
+        spearman: Dict[str, Optional[float]] = {}
+        finals = [t for t in study.completed_trials if t.values]
+        for s in spec.fidelity.stages:
+            key = STAGE_SCORE_ATTR + s.name
+            pairs = [(float(t.user_attrs[key]), float(t.values[0]))
+                     for t in finals if key in t.user_attrs]
+            spearman[s.name] = (_spearman([p[0] for p in pairs],
+                                          [p[1] for p in pairs])
+                                if len(pairs) >= 3 else None)
+        return {
+            "generation": spec.fidelity.generation,
+            "funnel": {
+                "asked": len(study.trials),
+                "screened": sum(screened_by_stage.values()),
+                "infeasible": sum(infeasible_by_stage.values()),
+                "promoted": promoted,
+                "compiled": sum(per_pid.values()),
+            },
+            "screened_by_stage": screened_by_stage,
+            "infeasible_by_stage": infeasible_by_stage,
+            "spearman": spearman,
+        }
+
     def _build_report(self, wall_clock: float) -> ExplorationReport:
         from repro.evaluation.disk_cache import toolchain_versions
 
@@ -337,6 +478,7 @@ class Explorer:
             criteria_values=criteria_values,
             pareto_front=self._pareto(),
             cache=_aggregate_cache_stats(study.trials),
+            fidelity=self._fidelity_report(),
             wall_clock_s=wall_clock,
             toolchain=toolchain_versions(),
             target=TARGETS.get(spec.target).to_dict(),

@@ -262,13 +262,20 @@ class DetachedTrial:
     executor when the worker returns.  ``report`` additionally streams
     each intermediate value to ``report_queue`` (when the executor
     provides one) so the parent — and through it, later submissions'
-    pruner snapshots — see sibling progress before the trial finishes."""
+    pruner snapshots — see sibling progress before the trial finishes.
+
+    ``params`` pre-seeds suggestions the parent already sampled (the
+    fidelity cascade samples in-parent to screen a cohort before
+    promoting survivors to workers): ``_suggest`` returns a seeded value
+    instead of re-deriving it, so the worker reuses the exact screened
+    configuration."""
 
     def __init__(self, number: int, sampler: DetachedSampler,
                  pruner: Optional[PrunerContext] = None,
-                 report_queue: Any = None):
+                 report_queue: Any = None,
+                 params: Optional[Dict[str, Any]] = None):
         self.number = number
-        self.params: Dict[str, Any] = {}
+        self.params: Dict[str, Any] = dict(params) if params else {}
         self.distributions: Dict[str, Distribution] = {}
         self.intermediate: Dict[int, float] = {}
         self.user_attrs: Dict[str, Any] = {}

@@ -91,11 +91,16 @@ def _portable_exception(e: BaseException) -> BaseException:
 
 def run_detached_trial(objective: Callable, number: int, plan: DetachedSampler,
                        catch: Tuple, pruner: Optional[PrunerContext] = None,
-                       report_queue: Any = None) -> WorkerResult:
+                       report_queue: Any = None,
+                       params: Optional[Dict[str, Any]] = None) -> WorkerResult:
     """Worker entry point: evaluate the objective on a detached trial.
     Uncaught exceptions are *returned* (not raised) so the sampled params
-    and attrs collected before the failure still reach the parent."""
-    trial = DetachedTrial(number, plan, pruner=pruner, report_queue=report_queue)
+    and attrs collected before the failure still reach the parent.
+    ``params`` pre-seeds suggestions already sampled in the parent (the
+    cascade's in-parent screening), so the worker evaluates exactly the
+    configuration that was screened."""
+    trial = DetachedTrial(number, plan, pruner=pruner, report_queue=report_queue,
+                          params=params)
     error: Optional[BaseException] = None
     try:
         values, state = evaluate_trial(objective, trial, catch)
@@ -403,7 +408,8 @@ class ProcessExecutor(BaseExecutor):
             pruner_ctx = self._pruner_context(study)
         future = self._pool.submit(
             run_detached_trial, objective, trial.number, plan, catch,
-            pruner=pruner_ctx, report_queue=self._report_queue)
+            pruner=pruner_ctx, report_queue=self._report_queue,
+            params=dict(trial.params) or None)
         self._track(trial, future)
         future.add_done_callback(
             lambda f, trial=trial: self._complete(

@@ -71,11 +71,27 @@ XLA compiler, which is the only way to get real compile concurrency
 ``process`` requires a picklable objective; with a picklable pruner it
 prunes *worker-side* from submit-time snapshots (see
 :mod:`repro.search.detached`).
+
+Generation-ring screening (``optimize(..., screen=..., cohort=N)``)
+    The fidelity-cascade scheduling mode: trials are asked a *cohort* at
+    a time and handed — still RUNNING, parameters sampled in-parent — to
+    the ``screen`` callable, which ranks them with cheap zero-cost /
+    analytic stages and returns a :class:`ScreenDecision`.  Trials cut by
+    a keep rule are told :attr:`TrialState.SCREENED` immediately (with
+    ``user_attrs["fidelity_stage"]`` naming the cutting stage) and
+    **never reach a worker**; hard-constraint casualties are told
+    INFEASIBLE the same way; survivors are promoted to the executor under
+    the selected schedule (batch or sliding window).  Because screening
+    samples every parameter in the parent, the usual synchronous first
+    trial is unnecessary — the distribution registry is complete before
+    any worker sees a trial.
 """
 from __future__ import annotations
 
+import collections
+import dataclasses
 import time
-from typing import Callable, Optional, Tuple, Union
+from typing import Callable, List, Optional, Tuple, Union
 
 from repro.search.executors import BaseExecutor, evaluate_trial, make_executor
 from repro.search.study import Study
@@ -83,6 +99,7 @@ from repro.search.trial import Trial, TrialState
 
 SCHEDULE_MODES = ("auto", "batch", "sliding_window")
 TELL_ORDERS = ("trial", "completion")
+DEFAULT_COHORT = 16  # generation size when screening without an explicit cohort
 
 # Clock used for timeout enforcement; module-level so tests can stub it.
 _monotonic = time.monotonic
@@ -92,6 +109,19 @@ def _check_choice(value: str, allowed: Tuple[str, ...], what: str) -> str:
     if value not in allowed:
         raise ValueError(f"unknown {what} {value!r}; expected one of {allowed}")
     return value
+
+
+@dataclasses.dataclass
+class ScreenDecision:
+    """What a ``screen`` callable decided about one cohort of RUNNING
+    trials: ``promoted`` go to the executor; ``screened`` are told
+    SCREENED (with the stage that cut them); ``infeasible`` are told
+    INFEASIBLE (a screening-stage hard constraint, carried as the
+    :class:`~repro.search.study.HardConstraintViolated` it raised)."""
+
+    promoted: List[Trial]
+    screened: List[Tuple[Trial, str]] = dataclasses.field(default_factory=list)
+    infeasible: List[Tuple[Trial, str, BaseException]] = dataclasses.field(default_factory=list)
 
 
 class ParallelStudy(Study):
@@ -134,7 +164,9 @@ class ParallelStudy(Study):
                  schedule: Optional[str] = None,
                  tell_order: Optional[str] = None,
                  window: Optional[int] = None,
-                 timeout_s: Optional[float] = None) -> None:
+                 timeout_s: Optional[float] = None,
+                 screen: Optional[Callable[[List[Trial]], ScreenDecision]] = None,
+                 cohort: Optional[int] = None) -> None:
         workers = max(1, int(n_workers if n_workers is not None else self.default_n_workers))
         executor = make_executor(backend if backend is not None else self.default_backend)
         mode = self._resolve_schedule(schedule)
@@ -144,22 +176,33 @@ class ParallelStudy(Study):
         win = max(1, int(win)) if win is not None else workers
         deadline = None if timeout_s is None else _monotonic() + float(timeout_s)
         remaining = int(n_trials)
+        coh = max(1, int(cohort)) if cohort is not None else DEFAULT_COHORT
 
-        # Evaluate the first trial synchronously: it registers the space's
-        # distributions (GridSampler's mixed-radix bookkeeping) and warms
-        # shared caches before workers fan out, so concurrent trials see a
-        # complete registry regardless of scheduling order.
-        if remaining > 0 and not self.trials:
-            trial = self.ask()
-            values, state = evaluate_trial(objective, trial, catch)
-            self.tell(trial, values, state)
-            remaining -= 1
+        if screen is None:
+            # Evaluate the first trial synchronously: it registers the
+            # space's distributions (GridSampler's mixed-radix bookkeeping)
+            # and warms shared caches before workers fan out, so concurrent
+            # trials see a complete registry regardless of scheduling order.
+            # (The ring path skips this — screening samples every parameter
+            # in the parent before anything is submitted.)
+            if remaining > 0 and not self.trials:
+                trial = self.ask()
+                values, state = evaluate_trial(objective, trial, catch)
+                self.tell(trial, values, state)
+                remaining -= 1
 
         if remaining <= 0 or (deadline is not None and _monotonic() >= deadline):
             return
         executor.start(workers)
         try:
-            if mode == "batch":
+            if screen is not None:
+                if mode == "batch":
+                    self._ring_batch(objective, remaining, catch, executor,
+                                     deadline, screen, coh)
+                else:
+                    self._ring_sliding(objective, remaining, catch, executor,
+                                       order, win, deadline, screen, coh)
+            elif mode == "batch":
                 self._optimize_batch(objective, remaining, workers, catch,
                                      executor, deadline)
             else:
@@ -252,5 +295,146 @@ class ParallelStudy(Study):
         for number in sorted(pending_tells):
             trial, outcome = pending_tells.pop(number)
             self._tell_outcome(trial, outcome)
+        if error is not None:
+            raise error
+
+    # -- generation-ring schedulers (fidelity cascade) ---------------------------
+
+    def _screen_and_tell(self, screen, trials: List[Trial]) -> List[Trial]:
+        """Run ``screen`` over one asked cohort and resolve everything it
+        rejected: screened trials are told SCREENED, screening-stage hard
+        constraint casualties INFEASIBLE (mirroring
+        :func:`~repro.search.study.evaluate_trial`'s ``violated`` attr),
+        both carrying ``fidelity_stage``.  Survivors come back still
+        RUNNING, tagged ``fidelity_stage="promoted"``, for the executor.
+        A screen that *raises* fails the whole cohort (no trial may stay
+        RUNNING) and re-raises."""
+        try:
+            decision = screen(trials)
+        except BaseException as e:
+            for t in trials:
+                if t.state == TrialState.RUNNING:
+                    t.set_user_attr("error", f"screen raised: {e!r}")
+                    self.tell(t, None, TrialState.FAIL)
+            raise
+        for t, stage in decision.screened:
+            t.set_user_attr("fidelity_stage", stage)
+            self.tell(t, None, TrialState.SCREENED)
+        for t, stage, exc in decision.infeasible:
+            t.set_user_attr("fidelity_stage", stage)
+            t.set_user_attr("violated", {
+                "name": getattr(exc, "name", None),
+                "value": getattr(exc, "value", None),
+                "limit": getattr(exc, "limit", None)})
+            self.tell(t, None, TrialState.INFEASIBLE)
+        for t in decision.promoted:
+            t.set_user_attr("fidelity_stage", "promoted")
+        return list(decision.promoted)
+
+    def _fail_unsubmitted(self, queued, reason: str) -> None:
+        """Trials that survived screening but never reached the executor
+        (deadline hit, or a sibling error stopped submissions) must not
+        stay RUNNING — tell them FAIL with the cancellation recorded,
+        exactly like cancelled executor submissions."""
+        for t in queued:
+            t.set_user_attr("cancelled", reason)
+            self._tell_outcome(t, (None, TrialState.FAIL))
+
+    def _ring_batch(self, objective, remaining, catch, executor, deadline,
+                    screen, cohort) -> None:
+        while remaining > 0:
+            if deadline is not None and _monotonic() >= deadline:
+                return
+            trials = [self.ask() for _ in range(min(cohort, remaining))]
+            remaining -= len(trials)
+            promoted = self._screen_and_tell(screen, trials)
+            if not promoted:
+                continue  # whole cohort screened out — ask the next one
+            outcomes = executor.run_batch(self, objective, promoted, catch)
+            error: Optional[BaseException] = None
+            for trial, outcome in zip(promoted, outcomes):
+                if isinstance(outcome, BaseException):
+                    error = error or outcome
+                self._tell_outcome(trial, outcome)
+            if error is not None:
+                raise error
+
+    def _ring_sliding(self, objective, remaining, catch, executor, tell_order,
+                      window, deadline, screen, cohort) -> None:
+        """Sliding window over screened survivors: refill by asking +
+        screening a cohort whenever the survivor queue runs dry, submit up
+        to ``window`` in flight.  With ``tell_order="trial"`` the reorder
+        buffer keys by *submission sequence* (trial numbers have gaps
+        where cohort-mates were screened out), so storage appends evolve
+        in promotion order."""
+        queue: "collections.deque[Trial]" = collections.deque()
+        pending_tells = {}  # submission seq -> (trial, outcome)
+        seq_of = {}         # trial number -> submission seq
+        next_seq = 0
+        tell_cursor = 0
+        error: Optional[BaseException] = None
+        stop_submitting = False
+
+        def flush_tells():
+            nonlocal tell_cursor
+            while tell_cursor in pending_tells:
+                trial, outcome = pending_tells.pop(tell_cursor)
+                self._tell_outcome(trial, outcome)
+                tell_cursor += 1
+
+        def handle(trial, outcome):
+            nonlocal error
+            if isinstance(outcome, BaseException):
+                error = error or outcome
+            if tell_order == "trial":
+                pending_tells[seq_of[trial.number]] = (trial, outcome)
+                flush_tells()
+            else:
+                self._tell_outcome(trial, outcome)
+
+        while True:
+            # refill the survivor queue — a cohort can be screened out
+            # entirely, so keep asking until survivors appear or the
+            # budget/deadline runs out
+            while (error is None and not stop_submitting and remaining > 0
+                   and not queue):
+                if deadline is not None and _monotonic() >= deadline:
+                    stop_submitting = True
+                    break
+                trials = [self.ask() for _ in range(min(cohort, remaining))]
+                remaining -= len(trials)
+                try:
+                    queue.extend(self._screen_and_tell(screen, trials))
+                except BaseException as e:
+                    error = error or e
+            # fill the window from the survivor queue
+            while (error is None and not stop_submitting and queue
+                   and executor.pending_count() < window):
+                if deadline is not None and _monotonic() >= deadline:
+                    stop_submitting = True
+                    break
+                trial = queue.popleft()
+                seq_of[trial.number] = next_seq
+                next_seq += 1
+                executor.submit(self, objective, trial, catch)
+            if error is not None:
+                for cancelled in executor.cancel_pending():
+                    cancelled.set_user_attr(
+                        "cancelled",
+                        f"submission cancelled: a sibling raised "
+                        f"{type(error).__name__}")
+                    handle(cancelled, (None, TrialState.FAIL))
+            if executor.pending_count() == 0:
+                break
+            trial, outcome = executor.next_completed()
+            handle(trial, outcome)
+        for seq in sorted(pending_tells):
+            trial, outcome = pending_tells.pop(seq)
+            self._tell_outcome(trial, outcome)
+        if queue:
+            self._fail_unsubmitted(
+                queue, "submission cancelled: "
+                + ("deadline reached before submission" if error is None
+                   else f"a sibling raised {type(error).__name__}"))
         if error is not None:
             raise error

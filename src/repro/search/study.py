@@ -24,9 +24,12 @@ class TrialPruned(Exception):
 
 
 class HardConstraintViolated(Exception):
-    def __init__(self, name: str, value: float, limit: float):
-        super().__init__(f"hard constraint '{name}' violated: {value} > {limit}")
+    def __init__(self, name: str, value: float, limit: float,
+                 direction: str = "minimize"):
+        op = ">" if direction == "minimize" else "<"
+        super().__init__(f"hard constraint '{name}' violated: {value} {op} {limit}")
         self.name, self.value, self.limit = name, value, limit
+        self.direction = direction
 
 
 def evaluate_trial(objective: Callable[[Trial], object], trial,

@@ -19,6 +19,7 @@ class TrialState(enum.Enum):
     PRUNED = "pruned"
     FAIL = "fail"
     INFEASIBLE = "infeasible"  # hard constraint violated
+    SCREENED = "screened"      # cut by a fidelity-cascade screening stage
 
 
 @dataclasses.dataclass
