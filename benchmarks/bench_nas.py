@@ -935,6 +935,158 @@ def bench_async_scheduler(quick: bool = False) -> None:
          f"mean_steps_when_pruned={mean_steps:.1f}")
 
 
+# ---------------------------------------------------------------------------
+# kernel-tune group: Pallas block/chunk schedules as a tunable layer —
+# tuned vs default wall-clock on the real kernels, plus warm-restart
+# zero-re-tune and fixed-seed best-trial parity through the facade
+# ---------------------------------------------------------------------------
+
+KERNEL_TUNE_SPEC = {
+    "name": "bench-kernel-tune",
+    "search_space": {
+        "input": [8, 256],  # l=256 divides every candidate chunk
+        "output": 6,
+        "sequence": [
+            {"block": "mixer", "op_candidates": "ssm",
+             "ssm": {"impl": ["pallas"], "d_state": [8, 16]}},
+            {"block": "head", "op_candidates": "linear",
+             "linear": {"width": [16, 32]}},
+        ],
+    },
+    "sampler": {"name": "random", "seed": 3},
+    "executor": {"backend": "serial"},
+    "criteria": [{"estimator": "latency_s", "kind": "objective",
+                  "params": {"batch": 2, "metric": "modelled"}}],
+    "kernel_tuning": {"mode": "cached", "budget": 4},
+    "budget": {"n_trials": 4},
+}
+
+
+def run_kernel_tune_config(cache_dir: str) -> dict:
+    """One facade run of the kernel-tuning experiment over ``cache_dir``
+    (subprocess mode: a fresh process proves warm restarts re-tune
+    nothing from disk alone, with no in-process tuner state)."""
+    from repro import Explorer, ExperimentSpec
+
+    spec = ExperimentSpec.from_dict({**KERNEL_TUNE_SPEC, "cache": cache_dir})
+    t0 = time.perf_counter()
+    report = Explorer.from_spec(spec).run(save_report=False)
+    seconds = time.perf_counter() - t0
+    kt = report.kernel_tuning or {}
+    best = report.best or {}
+    return {
+        "seconds": seconds,
+        "tunes": kt.get("tunes"),
+        "cache_hits": kt.get("cache_hits"),
+        "schedules": kt.get("schedules"),
+        "best_number": best.get("number"),
+        "best_params": best.get("params"),
+        "best_values": best.get("values"),
+    }
+
+
+def _run_kernel_tune_subprocess(cache_dir: str) -> dict:
+    import json
+    import os
+    import subprocess
+    import sys
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = {**os.environ}
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(repo, "src"), repo] + env.get("PYTHONPATH", "").split(os.pathsep))
+    cmd = [sys.executable, os.path.abspath(__file__), "--kernel-tune-config",
+           cache_dir]
+    r = subprocess.run(cmd, capture_output=True, text=True, env=env, timeout=1800)
+    if r.returncode != 0:
+        raise RuntimeError(f"kernel-tune config failed:\n{r.stderr[-4000:]}")
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+def bench_kernel_tune(quick: bool = False) -> None:
+    """Kernel schedules as a tunable layer.  What must hold: (1) on at
+    least one scan kernel the tuner's winner strictly beats the named
+    ``default`` schedule's wall-clock on this host; (2) a cold facade
+    run tunes and picks a non-default schedule, and a warm restart in a
+    *fresh process* over the same disk cache re-tunes nothing
+    (``tunes == 0``); (3) at a fixed seed the warm run's best trial is
+    identical to the cold run's (``best_match``)."""
+    import shutil
+    import tempfile
+
+    from repro.hwgen.autotune import ScheduleTuner, discover_kernel_calls
+    from repro.hwgen.targets import get_target
+    from repro.kernels import ops as kops
+    from repro.kernels.schedule import default_schedule
+
+    # (1) direct tuned-vs-default sweeps at the demo's shapes
+    b, l, h, p, g, n = 2, 256, 4, 16, 1, 16
+    zeros = jnp.zeros
+    sweeps = {
+        "ssm_scan": (lambda x, dt, a, bb, c: kops.ssm_scan(x, dt, a, bb, c)[0],
+                     (zeros((b, l, h, p)), zeros((b, l, h)), zeros((h,)),
+                      zeros((b, l, g, n)), zeros((b, l, g, n)))),
+        "mlstm_scan": (lambda q, k, v, i, f: kops.mlstm_scan(q, k, v, i, f)[0],
+                       (zeros((b, l, h, p)), zeros((b, l, h, p)),
+                        zeros((b, l, h, p)), zeros((b, l, h)), zeros((b, l, h)))),
+    }
+    tuner = ScheduleTuner(get_target("host_cpu"), warmup=1,
+                          iters=2 if quick else 3)
+    strict_wins = 0
+    for kernel, (fn, args) in sweeps.items():
+        (entry,) = discover_kernel_calls(fn, args).values()
+        record = tuner.tune(kernel, entry["shapes"], entry["meta"])
+        default = default_schedule(kernel).to_dict()
+        win = (record["schedule"] != default
+               and record["latency_s"] < record["default_latency_s"])
+        strict_wins += win
+        emit(f"kernel_tune/{kernel}", record["latency_s"],
+             f"schedule={record['schedule']};default={default};"
+             f"speedup_vs_default="
+             f"{record['default_latency_s'] / record['latency_s']:.2f}x;"
+             f"candidates={record['n_candidates']};strict_win={win}")
+    if not strict_wins:
+        raise AssertionError(
+            "no kernel's tuned schedule beat the default wall-clock — "
+            "schedules are not a useful tuning dimension on this host")
+
+    # (2) + (3) cold tune vs warm restart through the facade, separate
+    # processes sharing one disk cache
+    cache_dir = tempfile.mkdtemp(prefix="bench_kernel_tune_")
+    try:
+        cold = _run_kernel_tune_subprocess(cache_dir)
+        warm = _run_kernel_tune_subprocess(cache_dir)
+    finally:
+        shutil.rmtree(cache_dir, ignore_errors=True)
+    if not cold["tunes"]:
+        raise AssertionError(f"cold run tuned nothing: {cold}")
+    defaults = {k: default_schedule(k).to_dict() for k in (cold["schedules"] or {})}
+    non_default = any(sched != defaults[k]
+                      for k, sched in (cold["schedules"] or {}).items())
+    if not non_default:
+        raise AssertionError(
+            f"cold run selected only default schedules: {cold['schedules']}")
+    if warm["tunes"] != 0:
+        raise AssertionError(
+            f"warm restart re-tuned {warm['tunes']} sweeps — disk-cached "
+            f"schedules must make re-tuning zero")
+    best_match = (cold["best_number"] == warm["best_number"]
+                  and cold["best_params"] == warm["best_params"])
+    if not best_match:
+        raise AssertionError(
+            f"fixed-seed cold/warm best trials diverged: "
+            f"{cold['best_number']} vs {warm['best_number']}")
+    sched_str = "+".join(f"{k}.{f}={v}"
+                         for k, s in sorted((cold["schedules"] or {}).items())
+                         for f, v in sorted(s.items()))
+    emit("kernel_tune/cold", cold["seconds"],
+         f"tunes={cold['tunes']};schedules={sched_str}")
+    emit("kernel_tune/warm", warm["seconds"],
+         f"tunes=0;cache_hits={warm['cache_hits']};"
+         f"speedup_vs_cold={cold['seconds'] / warm['seconds']:.2f}x;"
+         f"best_match={best_match}")
+
+
 def main() -> None:
     bench_samplers()
     bench_builder_throughput()
@@ -945,6 +1097,7 @@ def main() -> None:
     bench_sweep_engine()
     bench_cascade()
     bench_async_scheduler()
+    bench_kernel_tune()
     bench_parallel_engine()
     bench_process_engine()
 
@@ -964,10 +1117,17 @@ if __name__ == "__main__":
         import json
 
         print(json.dumps(run_cascade_config(sys.argv[2], int(sys.argv[3]))))
+    elif len(sys.argv) == 3 and sys.argv[1] == "--kernel-tune-config":
+        # subprocess mode for bench_kernel_tune: emit one JSON line
+        import json
+
+        print(json.dumps(run_kernel_tune_config(sys.argv[2])))
     elif "--quick" in sys.argv[1:]:
-        # CI mode: the scheduler + cascade groups, small sizes, so
-        # scheduler and screening regressions surface in every PR log
+        # CI mode: the scheduler + cascade + kernel-tune groups, small
+        # sizes, so scheduler, screening, and schedule-tuning regressions
+        # surface in every PR log
         bench_async_scheduler(quick=True)
         bench_cascade(quick=True)
+        bench_kernel_tune(quick=True)
     else:
         main()

@@ -314,7 +314,11 @@ class AttentionBuilder(LayerBuilder):
         heads = max(1, min(heads, c))
         while c % heads:
             heads -= 1
-        cfg = AttentionConfig(d_model=c, n_heads=heads, n_kv_heads=heads, causal=bool(params.get("causal", False)))
+        # impl "pallas" routes through kernels/ops.flash_attention, where
+        # an active kernel schedule (tuned or searched) controls blocking
+        cfg = AttentionConfig(d_model=c, n_heads=heads, n_kv_heads=heads,
+                              causal=bool(params.get("causal", False)),
+                              impl=str(params.get("impl", "xla")))
 
         def apply_fn(p, x):
             return x + attention_apply(p, cfg, x)
@@ -327,4 +331,48 @@ class AttentionBuilder(LayerBuilder):
             out_format="BLC",
             flops=2 * l * (4 * c * c) + 4 * l * l * c,
             n_params=4 * c * c,
+        )
+
+
+@register_layer("ssm")
+class SSMBuilder(LayerBuilder):
+    """Mamba2 SSD block over a BLC sequence (residual).
+
+    impl "pallas" routes through kernels/ops.ssm_scan, making the block's
+    chunk size a schedulable (autotunable) kernel parameter.
+    """
+
+    in_format = "BLC"
+
+    def build(self, params, in_shape, in_format, *, is_last, output_dim):
+        from repro.nn.ssm import Mamba2Config, mamba2_apply, mamba2_init
+
+        l, c = in_shape
+        expand = int(params.get("expand", 2))
+        d_inner = expand * c
+        d_head = min(int(params.get("d_head", 64)), d_inner)
+        while d_inner % d_head:
+            d_head //= 2
+        cfg = Mamba2Config(
+            d_model=c,
+            d_state=int(params.get("d_state", 16)),
+            d_head=max(1, d_head),
+            expand=expand,
+            impl=str(params.get("impl", "xla")),
+        )
+
+        def apply_fn(p, x):
+            return x + mamba2_apply(p, cfg, x)
+
+        # dominant terms: in/out projections + the SSD scan's state update
+        n_params = c * (2 * cfg.d_inner + 2 * cfg.d_state + cfg.n_heads) \
+            + cfg.d_inner * c
+        return BuiltLayer(
+            name=f"ssm(n={cfg.d_state},e={expand})",
+            init=lambda key: mamba2_init(cfg, key),
+            apply=apply_fn,
+            out_shape=in_shape,
+            out_format="BLC",
+            flops=2 * l * n_params + 6 * l * cfg.d_inner * cfg.d_state,
+            n_params=n_params,
         )

@@ -163,6 +163,22 @@ register_env(EnvVar(
 ))
 
 register_env(EnvVar(
+    name="REPRO_TUNE_BUDGET",
+    parse=_positive_int,
+    expected="a positive integer",
+    description=(
+        "Maximum schedule candidates the kernel autotuner times per "
+        "(kernel, shape-bucket) sweep.  Candidate grids are ordered "
+        "default-first, so a budget of 1 degenerates to the named "
+        "`default` schedule with zero search.  An explicit "
+        "`kernel_tuning.budget` in the experiment spec wins over the "
+        "environment."),
+    default="8 (the full built-in candidate grid)",
+    malformed="warns and uses the default",
+    consulted_by="`repro/hwgen/autotune.py`",
+))
+
+register_env(EnvVar(
     name="REPRO_DRYRUN_DIR",
     parse=str,
     expected="a directory path",

@@ -26,9 +26,11 @@ from repro.core.builder import BuiltModel
 from repro.evaluation.api import Estimator
 from repro.evaluation.cache import EvaluationCache
 from repro.explorer.registry import ESTIMATORS
+from repro.hwgen.autotune import ScheduleTuner, discover_kernel_calls
 from repro.hwgen.generator import HardwareManager, XLAGenerator
 from repro.hwgen.roofline import roofline_terms
 from repro.hwgen.targets import TargetSpec
+from repro.kernels import schedule as ksched
 
 
 @ESTIMATORS.register("n_params")
@@ -88,7 +90,8 @@ class _CompiledEstimator(Estimator):
     """
 
     def __init__(self, target: TargetSpec | str, batch: int = 1,
-                 cache: Optional[EvaluationCache | str] = None):
+                 cache: Optional[EvaluationCache | str] = None,
+                 tuner: Optional[ScheduleTuner] = None):
         self.generator = XLAGenerator(target)
         self.batch = batch
         if cache is None:
@@ -96,24 +99,82 @@ class _CompiledEstimator(Estimator):
         elif not isinstance(cache, EvaluationCache):
             cache = EvaluationCache(disk=cache)
         self.cache = cache
+        self.tuner = tuner
 
-    def _program_key(self, name: str, candidate: BuiltModel):
+    def _program_key(self, name: str, candidate: BuiltModel, sig=None):
         """Key for chip-independent, compile-derived values: scoped by
-        mesh topology so targets sharing one reuse each other's entries."""
-        return (name, self.generator.target.mesh_scope, self.batch,
-                EvaluationCache.candidate_key(candidate))
+        mesh topology so targets sharing one reuse each other's entries.
+        ``sig`` is the *effective* kernel-schedule signature — requested
+        schedules that clamp to the same launch share one entry, and two
+        that clamp apart never collide.  ``None`` (no tuning, no context
+        schedules) keeps the legacy key shape byte-for-byte."""
+        key = (name, self.generator.target.mesh_scope, self.batch,
+               EvaluationCache.candidate_key(candidate))
+        return key if sig is None else key + (("sched", sig),)
 
-    def _target_key(self, name: str, candidate: BuiltModel):
+    def _target_key(self, name: str, candidate: BuiltModel, sig=None):
         """Key for deployment-specific values (wall-clock measurements)."""
-        return (name, self.generator.target.name, self.batch,
-                EvaluationCache.candidate_key(candidate))
+        key = (name, self.generator.target.name, self.batch,
+               EvaluationCache.candidate_key(candidate))
+        return key if sig is None else key + (("sched", sig),)
 
-    def _artifact(self, candidate: BuiltModel):
+    def _schedule_plan(self, candidate: BuiltModel, context=None):
+        """(schedules, effective-signature) for this candidate.
+
+        ``(None, None)`` — the common untuned path — when no schedules
+        arrived via context (``kernel_tuning.mode: search`` trial params)
+        and no tuner is attached, or when an abstract trace shows the
+        candidate reaches no schedulable kernel: cache keys then stay
+        exactly the legacy shape.  Otherwise the plan is: per discovered
+        kernel, context schedule > tuner override > tuned winner, and the
+        signature is taken from a second recording ``eval_shape`` pass so
+        it reflects the *effective* (shape-clamped) launches."""
+        from_context = (context or {}).get("schedules")
+        if from_context is None and self.tuner is None:
+            return None, None
+        l, c = candidate.input_shape[-1], candidate.input_shape[0]
+        x = jax.ShapeDtypeStruct((self.batch, l, c), jnp.float32)
+        params = jax.eval_shape(candidate.init, jax.random.PRNGKey(0))
+        calls = discover_kernel_calls(candidate.apply, (params, x))
+        if not calls:
+            return None, None
+        plan: Dict[str, ksched.KernelSchedule] = {}
+        for entry in calls.values():
+            kernel = entry["kernel"]
+            if kernel in plan:
+                continue
+            if from_context and kernel in from_context:
+                plan[kernel] = ksched.as_schedule(kernel, from_context[kernel])
+            elif self.tuner is not None:
+                if kernel in self.tuner.overrides:
+                    plan[kernel] = self.tuner.overrides[kernel]
+                else:
+                    record = self.tuner.tune(kernel, entry["shapes"],
+                                             entry["meta"])
+                    plan[kernel] = ksched.as_schedule(kernel,
+                                                      record["schedule"])
+            else:
+                plan[kernel] = ksched.default_schedule(kernel)
+        sink: Dict = {}
+        with ksched.use_schedules(plan), ksched.record_kernel_calls(sink):
+            jax.eval_shape(candidate.apply, params, x)
+        sig = ksched.effective_signature(sink)
+        trial = (context or {}).get("trial")
+        set_attr = getattr(trial, "set_user_attr", None)
+        if set_attr is not None:
+            set_attr("kernel_schedules",
+                     {k: s.to_dict() for k, s in sorted(plan.items())})
+        return plan, sig
+
+    def _artifact(self, candidate: BuiltModel, plan=None):
+        schedules, sig = plan if plan is not None else (None, None)
         l, c = candidate.input_shape[-1], candidate.input_shape[0]
         x = jnp.zeros((self.batch, l, c), jnp.float32)
         params = candidate.init(jax.random.PRNGKey(0))
-        key = self._program_key("artifact", candidate)
-        artifact = self.generator.generate_cached(self.cache, key, candidate.apply, (params, x))
+        key = self._program_key("artifact", candidate, sig)
+        artifact = self.generator.generate_cached(
+            self.cache, key, candidate.apply, (params, x),
+            schedules=schedules)
         target = self.generator.target
         if artifact.target is not target:
             # the cached artifact was compiled by a sibling target sharing
@@ -147,8 +208,9 @@ class CompiledLatencyEstimator(_CompiledEstimator):
     def __init__(self, target: TargetSpec | str, batch: int = 1,
                  manager: Optional[HardwareManager] = None,
                  cache: Optional[EvaluationCache | str] = None,
-                 metric: str = "measured"):
-        super().__init__(target, batch=batch, cache=cache)
+                 metric: str = "measured",
+                 tuner: Optional[ScheduleTuner] = None):
+        super().__init__(target, batch=batch, cache=cache, tuner=tuner)
         if metric not in ("measured", "modelled"):
             # a real raise, not an assert: metric is reachable from YAML
             # experiment specs, and asserts vanish under ``python -O``
@@ -159,18 +221,21 @@ class CompiledLatencyEstimator(_CompiledEstimator):
         self.metric = metric
 
     def estimate(self, candidate: BuiltModel, context=None) -> float:
+        plan = self._schedule_plan(candidate, context)
+        sig = plan[1]
         if self.metric == "modelled":
             # cache the chip-independent program quantities and apply the
             # target's chip constants afterwards: a second target with
             # the same mesh topology gets its modelled latency from the
             # cached terms without compiling anything
             def compute_terms():
-                artifact, _ = self._artifact(candidate)
+                artifact, _ = self._artifact(candidate, plan)
                 return [float(artifact.flops), float(artifact.bytes_accessed),
                         float(artifact.collective_bytes)]
 
             terms = self.cache.get_or_compute(
-                self._program_key("roofline_terms", candidate), compute_terms)
+                self._program_key("roofline_terms", candidate, sig),
+                compute_terms)
             report = roofline_terms(
                 hlo_flops=terms[0], hlo_bytes=terms[1],
                 collective_bytes=terms[2], n_chips=1,
@@ -178,11 +243,12 @@ class CompiledLatencyEstimator(_CompiledEstimator):
             return float(report.bound_s)
 
         def compute() -> float:
-            artifact, concrete = self._artifact(candidate)
+            artifact, concrete = self._artifact(candidate, plan)
             return float(self.manager.benchmark(artifact, concrete)["latency_s"])
 
         return self.cache.get_or_compute(
-            ("measured",) + self._target_key(self.name, candidate), compute)
+            ("measured",) + self._target_key(self.name, candidate, sig),
+            compute)
 
 
 @ESTIMATORS.register("peak_bytes")
@@ -190,13 +256,16 @@ class CompiledMemoryEstimator(_CompiledEstimator):
     name = "peak_bytes"
 
     def estimate(self, candidate: BuiltModel, context=None) -> float:
+        plan = self._schedule_plan(candidate, context)
+
         def compute() -> float:
-            artifact, _ = self._artifact(candidate)
+            artifact, _ = self._artifact(candidate, plan)
             return float(artifact.memory.get("peak_bytes_per_device", 0))
 
         # memory_analysis is a property of the compiled program, not the
         # chip, so targets sharing a mesh topology share the entry
-        return self.cache.get_or_compute(self._program_key(self.name, candidate), compute)
+        return self.cache.get_or_compute(
+            self._program_key(self.name, candidate, plan[1]), compute)
 
 
 @ESTIMATORS.register("val_accuracy")

@@ -276,8 +276,8 @@ class CriterionSpec:
         "limit": "constraint threshold; required for both constraint "
                  "kinds, ignored for objectives",
         "params": "estimator constructor kwargs, validated against its "
-                  "signature at parse time (`target` and `cache` are "
-                  "injected by the Explorer)",
+                  "signature at parse time (`target`, `cache`, and "
+                  "`tuner` are injected by the Explorer)",
     }
 
     @classmethod
@@ -307,11 +307,11 @@ class CriterionSpec:
         if kind != "objective" and limit is None:
             raise ExperimentError(f"{where}: kind {kind!r} requires a 'limit'")
         params = _require_mapping(raw.get("params") or {}, f"{where}.params")
-        # target/cache are injected by the Explorer; everything else must
-        # bind against the estimator constructor
+        # target/cache/tuner are injected by the Explorer; everything else
+        # must bind against the estimator constructor
         probe = dict(params)
         sig_params = inspect.signature(factory).parameters
-        for injected in ("target", "cache"):
+        for injected in ("target", "cache", "tuner"):
             if injected in sig_params:
                 probe.setdefault(injected, None)
         _check_component_kwargs(factory, probe, where)
@@ -333,16 +333,18 @@ class CriterionSpec:
             d["params"] = dict(self.params)
         return d
 
-    def build_estimator(self, target: Any = None, cache: Any = None):
+    def build_estimator(self, target: Any = None, cache: Any = None,
+                        tuner: Any = None):
         """Instantiate the estimator, injecting the experiment's hardware
-        target and shared cache wherever the constructor accepts them."""
+        target, shared cache, and kernel-schedule tuner wherever the
+        constructor accepts them."""
         factory = ESTIMATORS.get(self.estimator)
         kwargs = dict(self.params)
         sig_params = inspect.signature(factory).parameters
-        if "target" in sig_params and "target" not in kwargs and target is not None:
-            kwargs["target"] = target
-        if "cache" in sig_params and "cache" not in kwargs and cache is not None:
-            kwargs["cache"] = cache
+        for name, value in (("target", target), ("cache", cache),
+                            ("tuner", tuner)):
+            if name in sig_params and name not in kwargs and value is not None:
+                kwargs[name] = value
         return factory(**kwargs)
 
 
@@ -562,10 +564,94 @@ class FidelitySpec:
                 "generation": self.generation}
 
 
+@dataclasses.dataclass
+class KernelTuningSpec:
+    """Kernel-schedule tuning: make the Pallas block/chunk parameters a
+    per-target search dimension.  ``mode: cached`` attaches a
+    :class:`~repro.hwgen.autotune.ScheduleTuner` that sweeps a small
+    candidate grid per (kernel, shape-bucket, target) and memoizes the
+    winner in the evaluation cache; ``mode: search`` instead exposes the
+    schedule fields as extra trial parameters so the sampler co-optimizes
+    architecture × schedule."""
+
+    mode: str = "off"
+    budget: Optional[int] = None
+    kernels: Dict[str, Dict[str, Any]] = dataclasses.field(default_factory=dict)
+
+    KEYS = ("mode", "budget", "kernels")
+    MODES = ("off", "cached", "search")
+    FIELD_DOCS = {
+        "mode": "`off` (default) | `cached` — autotune each kernel per "
+                "(shape-bucket, target) and cache the winner, zero "
+                "re-tuning on warm restart | `search` — schedule fields "
+                "become trial parameters the sampler optimizes; a bare "
+                "string is shorthand for `{mode: ...}`",
+        "budget": "max schedule candidates timed per kernel/shape-bucket "
+                  "sweep (integer >= 1); wins over `REPRO_TUNE_BUDGET`; "
+                  "grids are default-first, so 1 degenerates to the "
+                  "named `default` schedule",
+        "kernels": "per-kernel schedule overrides, e.g. "
+                   "`{ssm_scan: {chunk: 64}}` — pinned kernels are never "
+                   "tuned (`cached`) or searched (`search`); fields are "
+                   "validated against the kernel's legal ranges at parse "
+                   "time",
+    }
+
+    @classmethod
+    def from_raw(cls, raw: Any, where: str = "kernel_tuning"
+                 ) -> Optional["KernelTuningSpec"]:
+        from repro.kernels.schedule import (KERNEL_FIELDS, ScheduleError,
+                                            as_schedule)
+
+        if raw is None:
+            return None
+        if isinstance(raw, str):
+            raw = {"mode": raw}
+        raw = _require_mapping(raw, where)
+        _check_keys(raw, set(cls.KEYS), where)
+        mode = str(raw.get("mode", "off"))
+        if mode not in cls.MODES:
+            raise ExperimentError(
+                f"{where}: unknown mode {mode!r}; expected one of {cls.MODES}")
+        budget = raw.get("budget")
+        if budget is not None:
+            try:
+                budget = int(budget)
+            except (TypeError, ValueError):
+                raise ExperimentError(
+                    f"{where}: budget must be an integer, got {budget!r}"
+                ) from None
+            if budget < 1:
+                raise ExperimentError(
+                    f"{where}: budget must be >= 1, got {budget}")
+        kernels: Dict[str, Dict[str, Any]] = {}
+        for kernel, fields in _require_mapping(raw.get("kernels") or {},
+                                               f"{where}.kernels").items():
+            if kernel not in KERNEL_FIELDS:
+                raise ExperimentError(
+                    f"{where}.kernels: unknown kernel {kernel!r}; "
+                    f"schedulable kernels: {sorted(KERNEL_FIELDS)}")
+            fields = _require_mapping(fields, f"{where}.kernels.{kernel}")
+            try:
+                as_schedule(kernel, fields)
+            except ScheduleError as e:
+                raise ExperimentError(f"{where}.kernels.{kernel}: {e}") from None
+            kernels[kernel] = dict(fields)
+        return cls(mode=mode, budget=budget, kernels=kernels)
+
+    def to_dict(self) -> Dict[str, Any]:
+        d: Dict[str, Any] = {"mode": self.mode}
+        if self.budget is not None:
+            d["budget"] = self.budget
+        if self.kernels:
+            d["kernels"] = {k: dict(v) for k, v in self.kernels.items()}
+        return d
+
+
 TOP_LEVEL_KEYS = (
     "name", "search_space", "sampler", "executor", "schedule", "criteria",
-    "fidelity", "target", "cache", "persistence", "budget", "pruner",
-    "scalarize", "report_dir",
+    "fidelity", "kernel_tuning", "target", "cache", "persistence", "budget",
+    "pruner", "scalarize", "report_dir",
 )
 
 # descriptions for the top-level experiment document, rendered into
@@ -587,6 +673,10 @@ TOP_LEVEL_DOCS = {
                 "below): candidates are screened a generation at a time "
                 "through cheap stages before the top-level criteria — the "
                 "implicit final stage — run on the survivors",
+    "kernel_tuning": "optional kernel-schedule tuning (see table below): "
+                     "Pallas block/chunk parameters become a per-target "
+                     "tuning dimension, autotuned+cached (`cached`) or "
+                     "co-searched with the architecture (`search`)",
     "target": "registered hardware target key (default `host_cpu`); "
               "injected into estimators that accept a `target` kwarg",
     "cache": "evaluation-cache configuration (see table below)",
@@ -645,6 +735,7 @@ class ExperimentSpec:
     budget: BudgetSpec = dataclasses.field(default_factory=BudgetSpec)
     pruner: Optional[PrunerSpec] = None
     fidelity: Optional[FidelitySpec] = None
+    kernel_tuning: Optional[KernelTuningSpec] = None
     scalarize: bool = True
     report_dir: str = "results"
 
@@ -728,6 +819,7 @@ class ExperimentSpec:
             budget=BudgetSpec.from_raw(raw.get("budget")),
             pruner=PrunerSpec.from_raw(raw.get("pruner")),
             fidelity=fidelity,
+            kernel_tuning=KernelTuningSpec.from_raw(raw.get("kernel_tuning")),
             scalarize=scalarize,
             report_dir=str(raw.get("report_dir", "results")),
         )
@@ -766,6 +858,8 @@ class ExperimentSpec:
             d["pruner"] = self.pruner.to_dict()
         if self.fidelity is not None:
             d["fidelity"] = self.fidelity.to_dict()
+        if self.kernel_tuning is not None:
+            d["kernel_tuning"] = self.kernel_tuning.to_dict()
         return d
 
     # -- derived views ---------------------------------------------------------

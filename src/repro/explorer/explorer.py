@@ -29,6 +29,7 @@ import json
 import math
 import os
 import time
+import uuid
 from typing import Any, Dict, List, Optional, Sequence
 
 from repro.explorer.experiment import ExperimentError, ExperimentSpec
@@ -39,11 +40,15 @@ def _canonical_spec_key(spec_dict: Dict[str, Any]) -> str:
     return json.dumps(spec_dict, sort_keys=True, separators=(",", ":"))
 
 
-# Per-process lazy state keyed by the canonical spec: the objective below
-# holds only a JSON dict, so it pickles across the process boundary; each
-# spawn worker re-imports this module and composes its own
-# space/builder/runner, sharing compiled values via the spec's disk cache.
-_PROCESS_STATE: Dict[str, Any] = {}
+# Per-process lazy state keyed by (canonical spec, run token): the
+# objective below holds only a JSON dict plus the token, so it pickles
+# across the process boundary; each spawn worker re-imports this module
+# and composes its own space/builder/runner, sharing compiled values via
+# the spec's disk cache.  The token is fresh per Explorer.run(), so a
+# second run of the same spec in one process rebuilds its cache/tuner
+# instead of inheriting the previous run's cumulative counters (which
+# would misreport e.g. a warm run's tune count as the cold run's).
+_PROCESS_STATE: Dict[Any, Any] = {}
 
 
 class SpecObjective:
@@ -55,9 +60,10 @@ class SpecObjective:
     cache counters) so the parent can aggregate cache behaviour across
     worker processes it cannot otherwise observe."""
 
-    def __init__(self, spec_dict: Dict[str, Any]):
+    def __init__(self, spec_dict: Dict[str, Any], run_token: Optional[str] = None):
         self.spec_dict = spec_dict
-        self._key = _canonical_spec_key(spec_dict)
+        self.run_token = run_token
+        self._key = (_canonical_spec_key(spec_dict), run_token)
 
     def _state(self):
         state = _PROCESS_STATE.get(self._key)
@@ -79,9 +85,20 @@ class SpecObjective:
             cache = EvaluationCache(disk=spec.cache.dir)
             target = TARGETS.get(spec.target)
 
+            tuner = None
+            kt = spec.kernel_tuning
+            if kt is not None and kt.mode == "cached":
+                from repro.hwgen.autotune import ScheduleTuner
+
+                # the tuner shares the experiment cache, so tuned
+                # schedules persist in the same flock-safe disk store as
+                # compiled values: warm restart = zero re-tuning
+                tuner = ScheduleTuner(target, cache=cache,
+                                      budget=kt.budget, overrides=kt.kernels)
+
             def build_criterion(c):
                 return OptimizationCriteria(
-                    c.build_estimator(target=target, cache=cache),
+                    c.build_estimator(target=target, cache=cache, tuner=tuner),
                     kind=c.kind, direction=c.direction,
                     weight=c.weight, limit=c.limit,
                 )
@@ -99,19 +116,29 @@ class SpecObjective:
                 runner = CascadeRunner(stages, cache=cache)
             else:
                 runner = CriteriaRunner(criteria, cache=cache)
-            state = _PROCESS_STATE[self._key] = (spec, space, builder, runner, cache)
+            # a prior run's state for the same spec is dead weight now —
+            # its counters must not leak into this run's report
+            for stale in [k for k in _PROCESS_STATE
+                          if k[0] == self._key[0] and k != self._key]:
+                del _PROCESS_STATE[stale]
+            state = _PROCESS_STATE[self._key] = (
+                spec, space, builder, runner, cache, tuner)
         return state
 
     @property
     def cache(self):
         return self._state()[4]
 
+    @property
+    def tuner(self):
+        return self._state()[5]
+
     def build_model(self, trial):
         """Rebuild the (already sampled) model for ``trial`` — used by
         :meth:`Explorer.best_model` to hand back the winning network."""
         from repro.core.translate import sample_architecture
 
-        _, space, builder, _, _ = self._state()
+        _, space, builder, _, _, _ = self._state()
         return builder.build(sample_architecture(space, trial))
 
     def screen_cohort(self, trials):
@@ -123,7 +150,7 @@ class SpecObjective:
         from repro.core.translate import sample_architecture
         from repro.search.parallel import ScreenDecision
 
-        _, space, builder, runner, _ = self._state()
+        _, space, builder, runner, _, _ = self._state()
         models = []
         for trial in trials:
             arch = sample_architecture(space, trial)
@@ -137,18 +164,54 @@ class SpecObjective:
                         for i, (stage, exc) in result.infeasible.items()],
         )
 
+    def _suggest_schedules(self, spec, model, trial):
+        """``kernel_tuning.mode: search``: expose each discovered kernel's
+        schedule fields as categorical trial parameters, so the sampler
+        co-optimizes architecture × schedule.  Spec-pinned kernels pass
+        through fixed — they are constraints, not search dimensions."""
+        import jax
+        import jax.numpy as jnp
+
+        from repro.hwgen.autotune import discover_kernel_calls
+        from repro.kernels.schedule import KERNEL_FIELDS, SEARCH_CHOICES
+
+        kt = spec.kernel_tuning
+        l, c = model.input_shape[-1], model.input_shape[0]
+        x = jax.ShapeDtypeStruct((1, l, c), jnp.float32)
+        params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        calls = discover_kernel_calls(model.apply, (params, x))
+        schedules: Dict[str, Dict[str, Any]] = {}
+        for entry in calls.values():
+            kernel = entry["kernel"]
+            if kernel in schedules:
+                continue
+            if kernel in kt.kernels:
+                schedules[kernel] = dict(kt.kernels[kernel])
+                continue
+            schedules[kernel] = {
+                field: trial.suggest_categorical(
+                    f"schedule:{kernel}:{field}", list(SEARCH_CHOICES[field]))
+                for field in KERNEL_FIELDS[kernel]
+            }
+        return schedules or None
+
     def __call__(self, trial):
         from repro.core.translate import sample_architecture
         from repro.hwgen.generator import generate_call_count
 
-        spec, space, builder, runner, cache = self._state()
+        spec, space, builder, runner, cache, tuner = self._state()
         arch = sample_architecture(space, trial)
         model = builder.build(arch)
         trial.set_user_attr("signature", arch.signature())
+        context: Dict[str, Any] = {"trial": trial}
+        if spec.kernel_tuning is not None and spec.kernel_tuning.mode == "search":
+            schedules = self._suggest_schedules(spec, model, trial)
+            if schedules is not None:
+                context["schedules"] = schedules
         if spec.scalarize:
-            value = runner.evaluate(model, trial=trial)
+            value = runner.evaluate(model, context=context, trial=trial)
         else:
-            value = runner.evaluate_multi(model, trial=trial)
+            value = runner.evaluate_multi(model, context=context, trial=trial)
         # generates: cumulative XLA generator invocations in this process —
         # the report's funnel aggregates it per pid to count how many
         # candidates actually paid a compile (screened-out ones never do)
@@ -156,6 +219,8 @@ class SpecObjective:
                   **cache.stats.as_dict()}
         if cache.disk is not None:
             worker.update(cache.disk.stats())
+        if tuner is not None:
+            worker.update({f"tuner_{k}": v for k, v in tuner.stats().items()})
         trial.set_user_attr("worker", worker)
         return value
 
@@ -255,6 +320,10 @@ class ExplorationReport:
     # counts, per-stage cut counts, proxy-vs-final Spearman); None when
     # the experiment has no fidelity section
     fidelity: Optional[Dict[str, Any]] = None
+    # kernel-schedule tuning summary (mode, schedules chosen for the best
+    # trial, tune/cache-hit counters, tune wall-clock); None when the
+    # experiment has no kernel_tuning section or mode is off
+    kernel_tuning: Optional[Dict[str, Any]] = None
     # full resolved TargetSpec (chip peak FLOPs/bandwidth, mesh, ...):
     # registered constants can be edited later, so the numbers that
     # actually produced this report must travel with it or cross-target
@@ -327,7 +396,8 @@ class Explorer:
             window=spec.schedule.window,
         )
         self.study = study
-        self._objective = objective = SpecObjective(spec.to_dict())
+        self._objective = objective = SpecObjective(
+            spec.to_dict(), run_token=uuid.uuid4().hex)
 
         # persistence resume: already-stored trials count against the budget
         remaining = spec.budget.n_trials - len(study.trials)
@@ -450,6 +520,47 @@ class Explorer:
             "spearman": spearman,
         }
 
+    def _kernel_tuning_report(self) -> Optional[Dict[str, Any]]:
+        """Schedules chosen (best trial's per-kernel plan), sweep effort
+        (tunes / cache hits / tune wall-clock, per-pid max of each
+        worker's cumulative counters — same discipline as the cache
+        aggregation), and which searched schedule params won."""
+        spec, study = self.spec, self.study
+        kt = spec.kernel_tuning
+        if kt is None or kt.mode == "off":
+            return None
+        per_pid: Dict[int, Dict[str, Any]] = {}
+        counters = ("tuner_tunes", "tuner_cache_hits", "tuner_tune_time_s")
+        for t in study.trials:
+            w = t.user_attrs.get("worker")
+            if not isinstance(w, dict) or "pid" not in w:
+                continue
+            cur = per_pid.setdefault(w["pid"], dict.fromkeys(counters, 0))
+            for k in counters:
+                cur[k] = max(cur[k], w.get(k, 0))
+        best = study.best_trial
+        schedules = None
+        if best is not None:
+            schedules = best.user_attrs.get("kernel_schedules")
+            if schedules is None and kt.mode == "search":
+                # reconstruct from the winning trial's schedule params
+                schedules = {}
+                for name, value in best.params.items():
+                    if not name.startswith("schedule:"):
+                        continue
+                    _, kernel, field = name.split(":", 2)
+                    schedules.setdefault(kernel, {})[field] = value
+                schedules = schedules or None
+        return {
+            "mode": kt.mode,
+            "budget": kt.budget,
+            "overrides": {k: dict(v) for k, v in kt.kernels.items()} or None,
+            "schedules": schedules,
+            "tunes": sum(c["tuner_tunes"] for c in per_pid.values()),
+            "cache_hits": sum(c["tuner_cache_hits"] for c in per_pid.values()),
+            "tune_time_s": sum(c["tuner_tune_time_s"] for c in per_pid.values()),
+        }
+
     def _build_report(self, wall_clock: float) -> ExplorationReport:
         from repro.evaluation.disk_cache import toolchain_versions
 
@@ -479,6 +590,7 @@ class Explorer:
             pareto_front=self._pareto(),
             cache=_aggregate_cache_stats(study.trials),
             fidelity=self._fidelity_report(),
+            kernel_tuning=self._kernel_tuning_report(),
             wall_clock_s=wall_clock,
             toolchain=toolchain_versions(),
             target=TARGETS.get(spec.target).to_dict(),

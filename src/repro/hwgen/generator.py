@@ -31,6 +31,7 @@ from repro.envvars import read_env
 from repro.hwgen.hlo_analysis import parse_collectives, total_collective_bytes
 from repro.hwgen.roofline import RooflineReport, roofline_terms
 from repro.hwgen.targets import TargetSpec, get_target
+from repro.kernels import schedule as ksched
 from repro.launch.mesh import make_mesh
 
 
@@ -46,6 +47,9 @@ class Artifact:
     memory: Dict[str, int]
     roofline: RooflineReport
     example_args: Tuple = ()
+    # the *effective* kernel schedules this executable was built with,
+    # keyed by kernel name (None = program used no schedulable kernels)
+    schedules: Optional[Dict[str, Dict[str, Any]]] = None
 
     @property
     def fits_memory(self) -> bool:
@@ -145,7 +149,13 @@ class XLAGenerator:
         in_shardings=None,
         out_shardings=None,
         static_argnums=(),
+        schedules=None,
     ) -> Artifact:
+        """``schedules`` maps kernel name -> :class:`KernelSchedule` (or a
+        field mapping); it is made active for the trace so every Pallas
+        kernel the program reaches launches with the tuned parameters,
+        and the artifact records the *effective* (shape-clamped)
+        schedules it was actually built with."""
         global _generate_count
         with _generate_count_lock:
             _generate_count += 1
@@ -159,6 +169,7 @@ class XLAGenerator:
         # workers; what overlaps is everything else: model build/init and
         # cache hits (wall-clock measurement takes the same gate — see
         # HardwareManager.benchmark).
+        kernel_calls: Dict[Tuple[str, str], Dict[str, Any]] = {}
         with compile_gate():
             with mesh:
                 jitted = jax.jit(
@@ -167,7 +178,12 @@ class XLAGenerator:
                     out_shardings=out_shardings,
                     static_argnums=static_argnums,
                 )
-                lowered = jitted.lower(*example_args)
+                # schedules bind at trace time (the kernel resolvers run
+                # in Python during lowering), and the recorder captures
+                # what each call actually launched with
+                with ksched.use_schedules(schedules), \
+                        ksched.record_kernel_calls(kernel_calls):
+                    lowered = jitted.lower(*example_args)
                 compiled = lowered.compile()
             ca = cost_analysis_dict(compiled)
             flops = float(ca.get("flops", 0.0))
@@ -193,6 +209,10 @@ class XLAGenerator:
             n_chips=1,  # per-device program quantities
             chip=self.target.chip,
         )
+        built_with = {
+            entry["kernel"]: entry["effective"].to_dict()
+            for entry in kernel_calls.values()
+        } or None
         return Artifact(
             target=self.target,
             compiled=compiled,
@@ -202,6 +222,7 @@ class XLAGenerator:
             memory=memory,
             roofline=roofline,
             example_args=example_args,
+            schedules=built_with,
         )
 
 

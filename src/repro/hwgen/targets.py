@@ -103,7 +103,7 @@ class TargetSpec:
 
 _COMMON_OPS = frozenset({
     "linear", "conv1d", "maxpool", "avgpool", "identity", "global_avg_pool",
-    "layernorm", "attention",
+    "layernorm", "attention", "ssm",
 })
 
 TARGETS: Dict[str, TargetSpec] = {

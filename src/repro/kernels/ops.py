@@ -3,17 +3,36 @@
 Handle layout transposes, group expansion, sequence padding to block
 multiples, and interpret-mode selection (Pallas TPU kernels execute via
 the interpreter on non-TPU backends — how this container validates them).
+
+Each public op is a plain-Python *resolver* over an inner jitted impl:
+schedule resolution, shape clamping, and call recording all happen
+outside jit, at trace time, so an active :func:`~repro.kernels.schedule
+.use_schedules` context is read fresh on every trace (a contextvar read
+inside a jitted body would be baked into the first trace and silently
+reused) and the *effective* — clamped — block sizes are observable by
+callers that key caches on them.  Resolution precedence:
+
+  explicit ``schedule=``  >  active ``use_schedules`` context
+      >  legacy block/chunk kwargs  >  the named ``default`` schedule.
+
+Legacy kwargs stay deliberately unvalidated: call sites derive them from
+shapes (e.g. a decrement-clamped chunk) and predate the legal-range
+rules.  The context outranks them so a generator can retarget kernels
+that a model's layers configured with their own constants.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
 import jax.numpy as jnp
 
 from repro.envvars import read_env
+from repro.kernels import schedule as ksched
 from repro.kernels.flash_attention import flash_attention_bhsd
 from repro.kernels.mlstm_scan import mlstm_scan_blhp
+from repro.kernels.schedule import KernelSchedule
 from repro.kernels.ssm_scan import ssm_scan_blhp
 
 
@@ -33,50 +52,119 @@ def _pad_seq(x, block, axis):
     return jnp.pad(x, widths), pad
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "window", "scale", "block_q", "block_kv"))
-def flash_attention(q, k, v, *, causal=True, window=None, scale=None,
-                    block_q=128, block_kv=128):
-    """q: (B, S, H, D); k/v: (B, T, KH, D)  [model layout] -> (B, S, H, D)."""
+def _resolve(kernel, schedule, legacy):
+    """Apply the precedence in the module docstring; returns a fully
+    populated (every size field set) KernelSchedule."""
+    if schedule is not None:
+        return ksched.as_schedule(kernel, schedule)
+    active = ksched.active_schedule(kernel)
+    if active is not None:
+        return active
+    legacy = {k: v for k, v in legacy.items() if v is not None}
+    if legacy:
+        # call-site kwargs: unvalidated by design (shape-derived values)
+        return KernelSchedule(**legacy).merged_over(
+            ksched.default_schedule(kernel))
+    return ksched.default_schedule(kernel)
+
+
+def _finish(requested, effective):
+    """Pin the interpret decision into the effective schedule so the
+    recorded metadata says how the kernel actually ran."""
+    interp = requested.interpret
+    if interp is None:
+        interp = _interpret()
+    return dataclasses.replace(effective, interpret=bool(interp))
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "scale", "block_q", "block_kv", "interpret"))
+def _flash_attention_impl(q, k, v, *, causal, window, scale,
+                          block_q, block_kv, interpret):
     qT = q.transpose(0, 2, 1, 3)
     kT = k.transpose(0, 2, 1, 3)
     vT = v.transpose(0, 2, 1, 3)
-    s0, t0 = qT.shape[2], kT.shape[2]
-    bq = min(block_q, max(16, s0))
-    bkv = min(block_kv, max(16, t0))
-    qT, _ = _pad_seq(qT, bq, 2)
-    kT, _ = _pad_seq(kT, bkv, 2)
-    vT, _ = _pad_seq(vT, bkv, 2)
+    s0 = qT.shape[2]
+    qT, _ = _pad_seq(qT, block_q, 2)
+    kT, _ = _pad_seq(kT, block_kv, 2)
+    vT, _ = _pad_seq(vT, block_kv, 2)
     # padded kv columns must be masked: rely on causal/window for tail; for
     # non-causal pads, mask via window=None + explicit kv validity
     out = flash_attention_bhsd(
         qT, kT, vT, causal=causal, window=window, scale=scale,
-        block_q=bq, block_kv=bkv, interpret=_interpret(),
+        block_q=block_q, block_kv=block_kv, interpret=interpret,
     )
     return out[:, :, :s0].transpose(0, 2, 1, 3)
 
 
-@functools.partial(jax.jit, static_argnames=("chunk",))
-def ssm_scan(x, dt, a, b_grouped, c_grouped, *, chunk=128):
-    """Mamba2 SSD scan.  x: (B,L,H,P); dt: (B,L,H); a: (H,);
-    b/c: (B,L,G,N) group layout (expanded here).  Returns (y, state)."""
+def flash_attention(q, k, v, *, causal=True, window=None, scale=None,
+                    block_q=None, block_kv=None, schedule=None):
+    """q: (B, S, H, D); k/v: (B, T, KH, D)  [model layout] -> (B, S, H, D)."""
+    requested = _resolve("flash_attention", schedule,
+                         {"block_q": block_q, "block_kv": block_kv})
+    s0, t0 = q.shape[1], k.shape[1]
+    eff = _finish(requested, ksched.effective_schedule(
+        "flash_attention", requested, seq_len=s0, kv_len=t0))
+    ksched.note_kernel_call(
+        "flash_attention", requested, eff,
+        shapes={"q": q.shape, "k": k.shape, "v": v.shape},
+        meta={"causal": causal, "window": window, "scale": scale,
+              "dtype": str(q.dtype)})
+    return _flash_attention_impl(
+        q, k, v, causal=causal, window=window, scale=scale,
+        block_q=eff.block_q, block_kv=eff.block_kv, interpret=eff.interpret)
+
+
+# ---------------------------------------------------------------------------
+# scan kernels
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def _ssm_scan_impl(x, dt, a, b_grouped, c_grouped, *, chunk, interpret):
     h = x.shape[2]
     g = b_grouped.shape[2]
     rep = h // g
     b_mat = jnp.repeat(b_grouped, rep, axis=2)
     c_mat = jnp.repeat(c_grouped, rep, axis=2)
-    ck = min(chunk, x.shape[1])
-    while x.shape[1] % ck:
-        ck //= 2
-    return ssm_scan_blhp(x, dt, a, b_mat, c_mat, chunk=max(ck, 1),
-                         interpret=_interpret())
+    return ssm_scan_blhp(x, dt, a, b_mat, c_mat, chunk=chunk,
+                         interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("chunk",))
-def mlstm_scan(q, k, v, i_log, f_log, *, chunk=128):
+def ssm_scan(x, dt, a, b_grouped, c_grouped, *, chunk=None, schedule=None):
+    """Mamba2 SSD scan.  x: (B,L,H,P); dt: (B,L,H); a: (H,);
+    b/c: (B,L,G,N) group layout (expanded here).  Returns (y, state)."""
+    requested = _resolve("ssm_scan", schedule, {"chunk": chunk})
+    eff = _finish(requested, ksched.effective_schedule(
+        "ssm_scan", requested, seq_len=x.shape[1]))
+    ksched.note_kernel_call(
+        "ssm_scan", requested, eff,
+        shapes={"x": x.shape, "dt": dt.shape, "a": a.shape,
+                "b": b_grouped.shape, "c": c_grouped.shape},
+        meta={"dtype": str(x.dtype)})
+    return _ssm_scan_impl(x, dt, a, b_grouped, c_grouped,
+                          chunk=eff.chunk, interpret=eff.interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def _mlstm_scan_impl(q, k, v, i_log, f_log, *, chunk, interpret):
+    return mlstm_scan_blhp(q, k, v, i_log, f_log, chunk=chunk,
+                           interpret=interpret)
+
+
+def mlstm_scan(q, k, v, i_log, f_log, *, chunk=None, schedule=None):
     """Chunkwise mLSTM.  All (B,L,H,P) / (B,L,H).  Returns (h, None)."""
-    ck = min(chunk, q.shape[1])
-    while q.shape[1] % ck:
-        ck //= 2
-    h = mlstm_scan_blhp(q, k, v, i_log, f_log, chunk=max(ck, 1),
-                        interpret=_interpret())
+    requested = _resolve("mlstm_scan", schedule, {"chunk": chunk})
+    eff = _finish(requested, ksched.effective_schedule(
+        "mlstm_scan", requested, seq_len=q.shape[1]))
+    ksched.note_kernel_call(
+        "mlstm_scan", requested, eff,
+        shapes={"q": q.shape, "k": k.shape, "v": v.shape,
+                "i_log": i_log.shape, "f_log": f_log.shape},
+        meta={"dtype": str(q.dtype)})
+    h = _mlstm_scan_impl(q, k, v, i_log, f_log,
+                         chunk=eff.chunk, interpret=eff.interpret)
     return h, None

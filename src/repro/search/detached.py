@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import os
 import random
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -216,6 +217,16 @@ class StudyView:
         self.trials = trials
 
 
+# Per-worker-process pruning history, keyed by the parent's context id:
+# ``context_id -> (applied_len, {trial_number: TrialRecord})``.  Each
+# PrunerContext ships only the delta-log *tail* the parent hasn't seen
+# this process acknowledge yet; :meth:`PrunerContext.apply` folds it in
+# idempotently, so a worker evaluating its 50th trial re-applies nothing
+# it already holds.  One entry at a time — a new context id (new study /
+# restarted executor) evicts the old history.
+_DELTA_HISTORY: Dict[str, Tuple[int, Dict[int, TrialRecord]]] = {}
+
+
 class PrunerContext:
     """Picklable pruning snapshot shipped with a detached plan.
 
@@ -225,22 +236,99 @@ class PrunerContext:
     far.  The decision is therefore *asynchronous* in the ASHA sense:
     based on a slightly stale rung population, never waiting on the
     parent.  MedianPruner and SuccessiveHalvingPruner read only what
-    :class:`TrialRecord` carries, so they run unchanged."""
+    :class:`TrialRecord` carries, so they run unchanged.
+
+    Two wire formats:
+
+    * ``records`` — a full history snapshot.  Simple, but re-serializes
+      every intermediate value of every trial on every submission
+      (O(n²) over a study).  Kept for direct construction in tests and
+      third-party executors.
+    * ``deltas`` + ``base`` + ``context_id`` — an incremental slice of
+      the parent's append-only delta log, starting at log offset
+      ``base``.  Entries are ``("report", number, step, value)`` for a
+      streamed intermediate report and ``("final", number, state,
+      values, intermediate)`` for a merged-back terminal record (which
+      supersedes that trial's streamed reports).  Workers accumulate the
+      log in process-local :data:`_DELTA_HISTORY` and acknowledge how
+      much they hold via :meth:`ack`, letting the parent truncate the
+      prefix every worker has applied and ship only tails.  A worker
+      that missed a truncated prefix (e.g. a replacement process joining
+      mid-study) cannot reconstruct the population, so it degrades to
+      "don't prune" rather than decide on partial history."""
 
     def __init__(self, pruner: Any, directions: Tuple[str, ...],
-                 records: List[TrialRecord]):
+                 records: Optional[List[TrialRecord]] = None, *,
+                 deltas: Optional[List[Tuple]] = None, base: int = 0,
+                 context_id: Optional[str] = None):
         self.pruner = pruner
         self.directions = tuple(directions)
         self.records = records
+        self.deltas = deltas
+        self.base = int(base)
+        self.context_id = context_id
+        self._applied: Optional[Tuple[int, Optional[Dict[int, TrialRecord]]]] = None
+
+    def apply(self) -> None:
+        """Worker-side: fold this context's delta slice into the
+        process-local history.  Idempotent — entries this process already
+        applied (per the stored ``applied_len``) are skipped."""
+        if self._applied is not None or self.context_id is None:
+            return
+        for stale in [k for k in _DELTA_HISTORY if k != self.context_id]:
+            del _DELTA_HISTORY[stale]
+        applied, records = _DELTA_HISTORY.get(self.context_id, (0, {}))
+        if applied < self.base:
+            # this process missed a truncated log prefix: the sibling
+            # population can't be reconstructed, so degrade to no-prune
+            # (ack the stale applied_len — the parent's min() over acks
+            # then stops truncating past what this process holds)
+            self._applied = (applied, None)
+            return
+        for delta in (self.deltas or [])[applied - self.base:]:
+            if delta[0] == "report":
+                _, number, step, value = delta
+                rec = records.get(number)
+                if rec is None:
+                    rec = records[number] = TrialRecord(TrialState.RUNNING, {})
+                rec.intermediate[int(step)] = float(value)
+            else:  # "final" — terminal record supersedes streamed reports
+                _, number, state, values, intermediate = delta
+                records[number] = TrialRecord(state, dict(intermediate), values)
+        applied = max(applied, self.base + len(self.deltas or ()))
+        _DELTA_HISTORY[self.context_id] = (applied, records)
+        self._applied = (applied, records)
+
+    def ack(self) -> Optional[Tuple[str, int, int]]:
+        """``(context_id, pid, applied_len)`` for the worker result —
+        tells the parent which log prefix this worker process durably
+        holds, so it can truncate what *every* worker has applied.
+        ``None`` for a legacy full-snapshot context."""
+        if self.context_id is None:
+            return None
+        self.apply()
+        return (self.context_id, os.getpid(), self._applied[0])
+
+    def _history(self) -> Optional[List[TrialRecord]]:
+        if self.context_id is None:
+            return list(self.records or [])
+        self.apply()
+        records = self._applied[1]
+        if records is None:  # degraded: missed a truncated prefix
+            return None
+        return [records[n] for n in sorted(records) if records[n].intermediate]
 
     def should_prune(self, trial: "DetachedTrial") -> bool:
         if not trial.intermediate:
+            return False
+        history = self._history()
+        if history is None:
             return False
         # the live path sees the asking trial inside study.trials too
         # (ASHA counts its own rung value), so mirror that here
         view = StudyView(
             self.directions,
-            self.records + [TrialRecord(TrialState.RUNNING, trial.intermediate)],
+            history + [TrialRecord(TrialState.RUNNING, trial.intermediate)],
         )
         try:
             return bool(self.pruner.prune(view, trial))

@@ -40,6 +40,7 @@ import multiprocessing
 import pickle
 import queue as queue_module
 import traceback
+import uuid
 from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
 from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
@@ -48,7 +49,6 @@ from repro.search.detached import (
     DetachedSampler,
     DetachedTrial,
     PrunerContext,
-    TrialRecord,
 )
 from repro.search.study import evaluate_trial
 from repro.search.trial import Distribution, Trial, TrialState
@@ -72,7 +72,26 @@ class WorkerResult:
     user_attrs: Dict[str, Any]
     system_attrs: Dict[str, Any]
     intermediate: Dict[int, float]
+    # (context_id, pid, applied_len): which pruner delta-log prefix the
+    # worker process holds (see PrunerContext) — lets the parent truncate
+    pruner_ack: Optional[Tuple[str, int, int]] = None
     error: Optional[BaseException] = None
+
+
+def _record_values(values: Any) -> Optional[Tuple[float, ...]]:
+    """Normalize a worker's raw objective value(s) to the tuple form
+    :class:`~repro.search.detached.TrialRecord` carries."""
+    if values is None:
+        return None
+    if isinstance(values, (tuple, list)):
+        try:
+            return tuple(float(v) for v in values)
+        except (TypeError, ValueError):
+            return None
+    try:
+        return (float(values),)
+    except (TypeError, ValueError):
+        return None
 
 
 def _portable_exception(e: BaseException) -> BaseException:
@@ -101,6 +120,11 @@ def run_detached_trial(objective: Callable, number: int, plan: DetachedSampler,
     configuration that was screened."""
     trial = DetachedTrial(number, plan, pruner=pruner, report_queue=report_queue,
                           params=params)
+    if pruner is not None:
+        # fold the shipped delta slice into this process's history up
+        # front, so the ack reflects it even if the objective never
+        # reports (and the first should_prune() pays no apply cost)
+        pruner.apply()
     error: Optional[BaseException] = None
     try:
         values, state = evaluate_trial(objective, trial, catch)
@@ -112,6 +136,7 @@ def run_detached_trial(objective: Callable, number: int, plan: DetachedSampler,
         number=number, values=values, state=state, params=trial.params,
         distributions=trial.distributions, user_attrs=trial.user_attrs,
         system_attrs=trial.system_attrs, intermediate=trial.intermediate,
+        pruner_ack=pruner.ack() if pruner is not None else None,
         error=error,
     )
 
@@ -293,8 +318,17 @@ class ProcessExecutor(BaseExecutor):
         self._n_workers = 0
         self._manager = None          # multiprocessing.Manager for the report channel
         self._report_queue = None     # proxy queue workers stream reports into
-        self._live_reports: Dict[int, Dict[int, float]] = {}
         self._pruner_ok: Dict[int, Tuple[Any, bool]] = {}  # id -> (pruner, picklable?)
+        # append-only pruner-history delta log (see _pruner_context); all
+        # of it is touched only from the scheduler thread (submit +
+        # next_completed's collect thunks), so no locking is needed
+        self._pruner_study = None     # study the current log belongs to
+        self._context_id: Optional[str] = None
+        self._delta_log: List[Tuple] = []
+        self._log_offset = 0          # global index of _delta_log[0]
+        self._finalized: set = set()  # trial numbers with a final delta
+        self._reported: set = set()   # numbers with streamed, unfinalized reports
+        self._acked: Dict[int, int] = {}  # worker pid -> applied log length
 
     def start(self, n_workers):
         if self._pool is not None:
@@ -311,7 +345,15 @@ class ProcessExecutor(BaseExecutor):
             self._manager.shutdown()
             self._manager = None
             self._report_queue = None
-        self._live_reports.clear()
+        # pool workers died with their _DELTA_HISTORY; a restarted
+        # executor must open a fresh context rather than resume this log
+        self._pruner_study = None
+        self._context_id = None
+        self._delta_log = []
+        self._log_offset = 0
+        self._finalized = set()
+        self._reported = set()
+        self._acked = {}
 
     def warmup(self, fn):
         """Run ``fn`` once per worker.  ``fn`` should be slow enough
@@ -343,7 +385,7 @@ class ProcessExecutor(BaseExecutor):
 
     def _drain_reports(self) -> None:
         """Pull streamed (number, step, value) intermediate reports into
-        the parent-side live view consulted by new pruner snapshots."""
+        the delta log consulted by new pruner snapshots."""
         q = self._report_queue
         if q is None:
             return
@@ -352,11 +394,69 @@ class ProcessExecutor(BaseExecutor):
                 number, step, value = q.get_nowait()
             except Exception:  # queue.Empty, or the manager going down
                 break
-            self._live_reports.setdefault(int(number), {})[int(step)] = float(value)
+            number = int(number)
+            if number in self._finalized:
+                continue  # the merged terminal record already supersedes these
+            self._reported.add(number)
+            self._delta_log.append(("report", number, int(step), float(value)))
+
+    def _reset_pruner_log(self, study) -> None:
+        """Open a fresh delta context when the study changes (a reused
+        executor), seeding the log with the history visible now."""
+        if study is self._pruner_study:
+            return
+        self._pruner_study = study
+        self._context_id = uuid.uuid4().hex
+        self._log_offset = 0
+        self._acked = {}
+        self._finalized = set()
+        self._reported = set()
+        self._delta_log = []
+        for t in study.trials:
+            if t.intermediate:
+                self._delta_log.append(
+                    ("final", t.number, t.state, _record_values(t.values),
+                     dict(t.intermediate)))
+            if t.state != TrialState.RUNNING:
+                self._finalized.add(t.number)
+
+    def _truncate_acked(self) -> None:
+        """Drop the log prefix every worker process has acknowledged
+        applying.  Until all workers have acked at least once, everything
+        ships from the context origin — a worker that misses a truncated
+        prefix can never prune again for this study (see PrunerContext),
+        so truncation waits for proof of delivery."""
+        if len(self._acked) >= self._n_workers and self._acked:
+            base = max(self._log_offset, min(self._acked.values()))
+            if base > self._log_offset:
+                del self._delta_log[: base - self._log_offset]
+                self._log_offset = base
+
+    def _finalize_delta(self, number: int, state: TrialState,
+                        values: Any, intermediate: Dict[int, float]) -> None:
+        """Append a trial's terminal record to the delta log, superseding
+        its streamed reports (an empty record drops a dead worker's
+        partial values from future snapshots)."""
+        if self._context_id is None or number in self._finalized:
+            return
+        self._finalized.add(number)
+        if intermediate or number in self._reported:
+            self._delta_log.append(
+                ("final", number, state, _record_values(values),
+                 dict(intermediate)))
+        self._reported.discard(number)
 
     def _pruner_context(self, study) -> Optional[PrunerContext]:
-        """Snapshot the pruner + intermediate history for one submission.
-        Called under the study lock (siblings' merged state is stable)."""
+        """Snapshot the pruner + history *slice* for one submission.
+        Called under the study lock (siblings' merged state is stable).
+
+        Instead of re-serializing the full intermediate history of every
+        trial per submission — O(trials × reports) each time, O(n²) over
+        a study — the parent keeps an append-only delta log of streamed
+        reports and merged terminal records.  Each submission ships only
+        the suffix past the prefix every worker has acknowledged holding
+        (``WorkerResult.pruner_ack``), so steady-state payloads are a
+        handful of entries regardless of study length."""
         pruner = getattr(study, "pruner", None)
         if pruner is None or not self._pruner_picklable(pruner):
             return None
@@ -364,16 +464,15 @@ class ProcessExecutor(BaseExecutor):
             ctx = multiprocessing.get_context(self.mp_context)
             self._manager = ctx.Manager()
             self._report_queue = self._manager.Queue()
+        self._reset_pruner_log(study)
         self._drain_reports()
-        records: List[TrialRecord] = []
-        for t in study.trials:
-            inter = dict(t.intermediate)
-            live = self._live_reports.get(t.number)
-            if live:
-                inter = {**live, **inter}  # merged-back values win
-            if inter:
-                records.append(TrialRecord(t.state, inter, t.values))
-        return PrunerContext(pruner, study.directions, records)
+        self._truncate_acked()
+        # copy: the pool's feeder thread pickles the payload while the
+        # scheduler thread may still be appending to the log
+        return PrunerContext(pruner, study.directions,
+                             deltas=list(self._delta_log),
+                             base=self._log_offset,
+                             context_id=self._context_id)
 
     # -- submission ------------------------------------------------------------
 
@@ -383,7 +482,6 @@ class ProcessExecutor(BaseExecutor):
         trial.user_attrs.update(res.user_attrs)
         trial.system_attrs.update(res.system_attrs)
         trial.intermediate.update(res.intermediate)
-        self._live_reports.pop(res.number, None)  # superseded by the merge
         with study._lock:
             for name, dist in res.distributions.items():
                 study.distribution_registry.setdefault(name, dist)
@@ -392,12 +490,18 @@ class ProcessExecutor(BaseExecutor):
         try:
             res = future.result()
         except BaseException as e:  # payload/result failed to pickle, worker died
-            # drop any reports the dead worker streamed: no merge happened,
-            # so later pruner snapshots must not count its partial values
-            self._live_reports.pop(trial.number, None)
+            # retract any reports the dead worker streamed: no merge
+            # happened, so later pruner snapshots must not count its
+            # partial values
+            self._finalize_delta(trial.number, TrialState.FAIL, None, {})
             trial.set_user_attr("error", repr(e))
             return e
         self._merge(study, trial, res)
+        if res.pruner_ack is not None:
+            cid, pid, applied = res.pruner_ack
+            if cid == self._context_id:
+                self._acked[pid] = max(self._acked.get(pid, 0), int(applied))
+        self._finalize_delta(res.number, res.state, res.values, res.intermediate)
         if res.error is not None:
             return res.error
         return (res.values, res.state)

@@ -298,6 +298,31 @@ def test_persistence_resume_counts_against_budget(tmp_path):
     assert r2.n_trials == 7
 
 
+def test_rerun_in_same_process_gets_fresh_objective_state(tmp_path):
+    # Two runs of the SAME spec in one process must not share pipeline
+    # state: the report reads cumulative cache/tuner counters from the
+    # objective's per-process state, so inheriting run 1's state would
+    # attribute its work (e.g. kernel tunes) to run 2.  Disk-tier values
+    # still flow between runs — only the counters/instances are fresh.
+    from repro.explorer.explorer import SpecObjective
+
+    raw = make_experiment(tmp_path, cache={"dir": str(tmp_path / "cache")})
+    e1, e2 = Explorer.from_dict(raw), Explorer.from_dict(raw)
+    r1 = e1.run(save_report=False)
+    r2 = e2.run(save_report=False)
+    assert r1.best["number"] == r2.best["number"]
+    assert e1._objective.run_token != e2._objective.run_token
+    assert e1._objective.cache is not e2._objective.cache
+    # run 2's report counts only its own lookups, not run 1's as well
+    assert r2.cache["misses"] <= r1.cache["misses"]
+    # same token -> same state (what keeps per-worker memoization alive
+    # across submissions within one run); run 1's entry was evicted
+    spec_dict = e2._objective.spec_dict
+    token = e2._objective.run_token
+    assert (SpecObjective(spec_dict, token)._state()
+            is e2._objective._state())
+
+
 # ---------------------------------------------------------------------------
 # satellite fixes: criteria validation survives -O, duplicate detection
 # ---------------------------------------------------------------------------
