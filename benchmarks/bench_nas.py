@@ -348,9 +348,20 @@ def run_parallel_config(name: str, cache_dir: str | None = None) -> dict:
         study = Study(sampler=RandomSampler(seed=PARALLEL_SEED))
         objective = CompileBoundObjective(cache_dir, tag=name)
         opt_kw = {}
-    elif name in ("disk_thread2", "disk_process2"):
+    elif name in ("disk_thread2", "disk_process2", "disk_remote2"):
+        obj_cls = CompileBoundObjective
         if name == "disk_thread2":
             backend = "thread"
+        elif name == "disk_remote2":
+            # worker-daemon pool from REPRO_REMOTE_WORKERS (the bench
+            # spawns the daemons); warmed like the process pool so the
+            # measured region excludes jax import + XLA backend init
+            from repro.search.remote.executor import RemoteExecutor
+
+            backend = RemoteExecutor()
+            backend.start(2)
+            backend.warmup(_remote_safe("_warm_worker"))
+            obj_cls = _remote_safe("CompileBoundObjective")
         else:
             # Pre-start + warm the worker processes (interpreter spawn,
             # jax import, XLA backend init) before the measured region:
@@ -363,7 +374,7 @@ def run_parallel_config(name: str, cache_dir: str | None = None) -> dict:
             backend.warmup(_warm_worker)
         study = ParallelStudy(sampler=RandomSampler(seed=PARALLEL_SEED),
                               n_workers=2, backend=backend)
-        objective = CompileBoundObjective(cache_dir, tag=name)
+        objective = obj_cls(cache_dir, tag=name)
         opt_kw = {"n_workers": 2}
     else:
         raise KeyError(name)
@@ -379,14 +390,25 @@ def run_parallel_config(name: str, cache_dir: str | None = None) -> dict:
         "best_number": best.number,
         "best_value": best.values[0],
     }
-    if isinstance(objective, CompileBoundObjective):
+    if type(objective).__name__ == "CompileBoundObjective":
         # per-worker cumulative counters, aggregated across processes
         # (includes the authoritative hit_rate for these configs)
         out.update(aggregate_worker_stats(study))
     return out
 
 
-def _run_config_subprocess(name: str, cache_dir: str | None = None) -> dict:
+def _remote_safe(name: str):
+    """Resolve a module-level name via the importable ``benchmarks.bench_nas``
+    path.  When this file runs as a script its globals pickle as
+    ``__main__.X``, which a remote worker daemon (whose ``__main__`` is
+    ``repro.worker``) cannot resolve — the twin from the real module can be."""
+    import benchmarks.bench_nas as mod
+
+    return getattr(mod, name)
+
+
+def _run_config_subprocess(name: str, cache_dir: str | None = None,
+                           extra_env: dict | None = None) -> dict:
     """Run one configuration in an isolated interpreter and parse its
     JSON result line (see run_parallel_config for why isolation matters)."""
     import json
@@ -395,7 +417,7 @@ def _run_config_subprocess(name: str, cache_dir: str | None = None) -> dict:
     import sys
 
     repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    env = {**os.environ}
+    env = {**os.environ, **(extra_env or {})}
     env["PYTHONPATH"] = os.pathsep.join(
         [os.path.join(repo, "src"), repo] + env.get("PYTHONPATH", "").split(os.pathsep))
     cmd = [sys.executable, os.path.abspath(__file__), "--parallel-config", name]
@@ -477,6 +499,124 @@ def bench_process_engine() -> None:
     finally:
         shutil.rmtree(dir_thread, ignore_errors=True)
         shutil.rmtree(dir_process, ignore_errors=True)
+
+
+def _spawn_worker_daemon(cache_dir: str):
+    """Launch one ``python -m repro.worker`` daemon on an ephemeral port
+    and return ``(proc, "host:port")`` once it prints its bound address."""
+    import os
+    import subprocess
+    import sys
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = {**os.environ}
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(repo, "src"), repo] + env.get("PYTHONPATH", "").split(os.pathsep))
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.worker", "--port", "0",
+         "--cache-dir", cache_dir, "--no-warmup"],
+        stdout=subprocess.PIPE, stderr=subprocess.DEVNULL, text=True, env=env)
+    deadline = time.monotonic() + 120.0
+    addr = None
+    while time.monotonic() < deadline:
+        line = proc.stdout.readline()
+        if not line:
+            break
+        if line.startswith("listening on "):
+            addr = line.split()[-1].strip()
+            break
+    if not addr:
+        proc.kill()
+        raise RuntimeError("worker daemon never printed its bound address")
+    return proc, addr
+
+
+def bench_remote_engine() -> None:
+    """Remote worker daemons vs the local process pool at n_workers=2 on
+    the compile-bound objective (each against its own cold disk store),
+    then a kill-one-worker run over the remote pool's warm store.
+
+    What must hold: (1) the remote run finds the identical best trial as
+    the process run at the same seed — detached plans make the wire
+    transparent to the search; (2) SIGKILLing one of the two daemons
+    mid-run still completes every trial via bounded resubmission to the
+    surviving sibling, again with the identical best trial."""
+    import shutil
+    import tempfile
+    import threading
+    import warnings as _warnings
+
+    trials = PARALLEL_TRIALS
+    dir_process = tempfile.mkdtemp(prefix="bench-nas-cache-rproc-")
+    dir_remote = tempfile.mkdtemp(prefix="bench-nas-cache-remote-")
+    daemons = []
+    try:
+        cold_process = _run_config_subprocess("disk_process2", dir_process)
+        daemons = [_spawn_worker_daemon(dir_remote) for _ in range(2)]
+        addrs = [a for _, a in daemons]
+        cold_remote = _run_config_subprocess(
+            "disk_remote2", dir_remote,
+            extra_env={"REPRO_REMOTE_WORKERS": ",".join(addrs)})
+        best_match = (cold_remote["best_number"] == cold_process["best_number"]
+                      and cold_remote["best_value"] == cold_process["best_value"])
+        if not best_match:
+            raise AssertionError(
+                f"remote best trial {cold_remote['best_number']} diverged from "
+                f"process best {cold_process['best_number']} at the same seed")
+        emit("remote/process2", cold_process["seconds"] / trials,
+             f"compiles={cold_process['generates']};"
+             f"hit_rate={cold_process['hit_rate']:.2f}")
+        emit("remote/remote2", cold_remote["seconds"] / trials,
+             f"vs_process={cold_process['seconds'] / cold_remote['seconds']:.2f}x;"
+             f"compiles={cold_remote['generates']};"
+             f"hit_rate={cold_remote['hit_rate']:.2f};"
+             f"best_match={best_match}")
+
+        # kill-one-worker: warm store, driven from this process so the
+        # victim daemon can be SIGKILLed mid-run
+        from repro.search.remote.executor import RemoteExecutor
+
+        study = ParallelStudy(sampler=RandomSampler(seed=PARALLEL_SEED),
+                              n_workers=2,
+                              backend=RemoteExecutor(workers=list(addrs)),
+                              schedule="sliding_window",
+                              tell_order="completion")
+        victim = daemons[0][0]
+        # the warm-store run finishes in well under a second, so the kill
+        # must land early to hit it mid-flight (killed_mid_run reports
+        # whether it actually did)
+        killer = threading.Timer(0.05, victim.kill)
+        t0 = time.perf_counter()
+        killer.start()
+        with _warnings.catch_warnings():
+            # the worker-lost + resubmit warning is the expected path here
+            _warnings.simplefilter("ignore", RuntimeWarning)
+            study.optimize(
+                _remote_safe("CompileBoundObjective")(dir_remote, tag="kill"),
+                trials)
+        dt = time.perf_counter() - t0
+        killer.cancel()
+        killed_mid_run = victim.poll() is not None
+        best = study.best_trial
+        if (best.number != cold_remote["best_number"]
+                or best.values[0] != cold_remote["best_value"]):
+            raise AssertionError(
+                f"kill-one-worker run diverged: best {best.number} vs "
+                f"{cold_remote['best_number']} — resubmitted trials must "
+                f"reproduce their original parameters")
+        incomplete = [t for t in study.trials
+                      if t.state not in (TrialState.COMPLETE, TrialState.PRUNED)]
+        if incomplete:
+            raise AssertionError(
+                f"{len(incomplete)} trials did not complete after the kill")
+        emit("remote/kill_one_worker", dt / trials,
+             f"completed={len(study.trials)}/{trials};"
+             f"killed_mid_run={killed_mid_run};best_match=True")
+    finally:
+        for proc, _ in daemons:
+            proc.kill()
+        shutil.rmtree(dir_process, ignore_errors=True)
+        shutil.rmtree(dir_remote, ignore_errors=True)
 
 
 def bench_explorer_facade() -> None:
@@ -1100,6 +1240,7 @@ def main() -> None:
     bench_kernel_tune()
     bench_parallel_engine()
     bench_process_engine()
+    bench_remote_engine()
 
 
 if __name__ == "__main__":

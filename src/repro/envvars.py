@@ -3,7 +3,8 @@
 Each knob is declared exactly once, with its parser, default, and the
 documented malformed-value fallback; the readers
 (:mod:`repro.hwgen.generator`, :mod:`repro.evaluation.disk_cache`,
-:mod:`repro.kernels.ops`, ``benchmarks/bench_roofline.py``) consult this
+:mod:`repro.kernels.ops`, :mod:`repro.search.remote`,
+``benchmarks/bench_roofline.py``) consult this
 registry through :func:`read_env`, and ``scripts/gen_docs.py`` renders
 ``docs/reference/env.md`` from the same entries — the prose cannot drift
 from the behaviour because they share one source of truth.
@@ -97,6 +98,31 @@ def _flag(raw: str) -> bool:
     return raw not in ("0", "false")
 
 
+def _non_negative_int(raw: str) -> int:
+    value = int(raw)
+    if value < 0:
+        raise ValueError(raw)
+    return value
+
+
+def _positive_float(raw: str) -> float:
+    value = float(raw)
+    if value <= 0:
+        raise ValueError(raw)
+    return value
+
+
+def _addr_list(raw: str) -> list:
+    addrs = [part.strip() for part in raw.split(",") if part.strip()]
+    for addr in addrs:
+        host, _, port = addr.rpartition(":")
+        if not host or not port.isdigit():
+            raise ValueError(raw)
+    if not addrs:
+        raise ValueError(raw)
+    return addrs
+
+
 # -- the registry ------------------------------------------------------------
 # Declared here, read elsewhere: generator/disk_cache/ops/bench_roofline call
 # read_env() with their own computed defaults.
@@ -131,6 +157,86 @@ register_env(EnvVar(
     default="unset — the store grows without bound (append-only)",
     malformed="warns and leaves the store unbounded",
     consulted_by="`repro/evaluation/disk_cache.py`",
+))
+
+register_env(EnvVar(
+    name="REPRO_CACHE_DIR",
+    parse=str,
+    expected="a directory path",
+    description=(
+        "Overrides the store directory of every disk evaluation cache "
+        "opened in the process, regardless of the path the spec or "
+        "constructor asked for.  Worker daemons (`python -m repro.worker "
+        "--cache-dir ...`) set it so experiment specs shipped from a "
+        "submitting host — whose `cache.dir` names a path that only "
+        "exists over there — land in the worker's local or "
+        "cluster-shared store instead."),
+    default="unset — the spec/constructor path is used as-is",
+    malformed="not applicable — every non-blank value is a valid path",
+    consulted_by="`repro/evaluation/disk_cache.py`",
+))
+
+register_env(EnvVar(
+    name="REPRO_REMOTE_WORKERS",
+    parse=lambda raw: _addr_list(raw),
+    expected="a comma-separated list of host:port addresses",
+    description=(
+        "Default worker pool for the remote executor: a comma-separated "
+        "`host:port` list (e.g. `10.0.0.4:7471,10.0.0.5:7471`) consulted "
+        "when neither the `executor.workers` spec key nor the "
+        "constructor argument names one.  Lets `--backend remote` on the "
+        "CLI work without editing the experiment YAML."),
+    default="unset — the executor requires an explicit worker list",
+    malformed="warns and behaves as unset",
+    consulted_by="`repro/search/remote/executor.py`",
+))
+
+register_env(EnvVar(
+    name="REPRO_REMOTE_TIMEOUT_S",
+    parse=_positive_float,
+    expected="a positive number of seconds",
+    description=(
+        "Heartbeat timeout for remote workers: a worker silent for "
+        "longer (no heartbeat, report, ack, or result) is declared dead, "
+        "its connection is closed, and its in-flight trial is resubmitted "
+        "to a sibling.  Worker daemons heartbeat every "
+        "`REPRO_REMOTE_HEARTBEAT_S` seconds, so the timeout should be a "
+        "comfortable multiple of that.  The `heartbeat_timeout_s` "
+        "executor option wins over the environment."),
+    default="10.0",
+    malformed="warns and uses the default",
+    consulted_by="`repro/search/remote/client.py`",
+))
+
+register_env(EnvVar(
+    name="REPRO_REMOTE_HEARTBEAT_S",
+    parse=_positive_float,
+    expected="a positive number of seconds",
+    description=(
+        "Interval at which a worker daemon sends heartbeat frames on "
+        "each live connection (the liveness signal behind "
+        "`REPRO_REMOTE_TIMEOUT_S`).  Read by the daemon, not the "
+        "executor; the `--heartbeat` CLI flag wins over the "
+        "environment."),
+    default="2.0",
+    malformed="warns and uses the default",
+    consulted_by="`repro/search/remote/worker.py`",
+))
+
+register_env(EnvVar(
+    name="REPRO_REMOTE_RETRIES",
+    parse=lambda raw: _non_negative_int(raw),
+    expected="a non-negative integer",
+    description=(
+        "How many times the remote executor resubmits one trial after "
+        "worker failures (death, heartbeat timeout, straggler timeout) "
+        "before surfacing the failure as a study error.  Resubmission is "
+        "safe because detached plans are deterministic: the retried "
+        "trial reproduces the original's parameters exactly.  The "
+        "`retries` executor option wins over the environment."),
+    default="2",
+    malformed="warns and uses the default",
+    consulted_by="`repro/search/remote/client.py`",
 ))
 
 register_env(EnvVar(

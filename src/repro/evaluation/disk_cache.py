@@ -28,6 +28,22 @@ architecture at most once per host:
     lines and re-scan the tail on miss, so a value computed by one
     worker is found by the others without recompiling.
 
+**Shared-filesystem caveat (remote workers):** worker daemons pointed at
+one store directory over NFS share compiled values across hosts, but
+``flock`` on NFS is only reliable on NFSv4-era mounts; older setups
+reject it (``ENOLCK``/``EOPNOTSUPP``) or grant it without cross-host
+exclusion.  When ``flock`` raises, :mod:`repro.ioutils` falls back to
+``fcntl.lockf`` range locks (NFS's native locking protocol) with a
+one-line ``RuntimeWarning`` per store.  If a mount grants ``flock``
+*non-exclusively* (silent NFSv2/v3 emulation), no error is observable —
+worst case is a torn JSONL line, which readers already skip as corrupt
+and rewrite on the next store; the cache degrades to extra recomputes,
+never to wrong values.  ``REPRO_CACHE_DIR`` overrides the store
+directory for every cache opened in the process — this is how
+``python -m repro.worker --cache-dir`` redirects shipped experiment
+specs (whose ``cache.dir`` names a path on the submitting host) into the
+worker's local or cluster-shared store.
+
 The store is warm-loaded at construction (study/estimator setup time)
 and refreshed incrementally on miss, so a restarted study starts with
 every previously compiled value already resident.
@@ -61,17 +77,13 @@ import os
 import threading
 from typing import Any, Dict, Hashable, List, Optional, Tuple
 
-try:
-    import fcntl
-except ImportError:  # pragma: no cover — non-POSIX hosts
-    fcntl = None
-
 from repro.envvars import read_env
-from repro.ioutils import locked_append
+from repro.ioutils import lock_file, locked_append, unlock_file
 
 DEFAULT_DIR = os.path.join("results", "cache")
 
 MAX_ENTRIES_ENV = "REPRO_CACHE_MAX_ENTRIES"
+CACHE_DIR_ENV = "REPRO_CACHE_DIR"
 
 
 def _max_entries_from_env() -> Optional[int]:
@@ -141,7 +153,11 @@ class DiskEvaluationCache:
     EPOCH_FILENAME = "compaction.epoch"
 
     def __init__(self, path: str = DEFAULT_DIR, max_entries: Optional[int] = None):
-        self.path = str(path)
+        # REPRO_CACHE_DIR redirects every store opened in this process —
+        # worker daemons use it to keep shipped specs (whose cache.dir is
+        # a path on the submitting host) inside their own store
+        override = read_env(CACHE_DIR_ENV, None)
+        self.path = str(override) if override else str(path)
         self._file = os.path.join(self.path, self.FILENAME)
         self._epoch_file = os.path.join(self.path, self.EPOCH_FILENAME)
         self._epoch: Optional[str] = None  # last-seen compaction token
@@ -274,8 +290,7 @@ class DiskEvaluationCache:
         except OSError:
             return  # store vanished under us: nothing to compact
         with f:
-            if fcntl is not None:
-                fcntl.flock(f.fileno(), fcntl.LOCK_EX)
+            how = lock_file(f, self._file)
             try:
                 # re-read the WHOLE file under the lock: siblings may have
                 # appended records this process has never seen, and the
@@ -330,8 +345,7 @@ class DiskEvaluationCache:
                     ef.write(epoch)
                 self._epoch = epoch
             finally:
-                if fcntl is not None:
-                    fcntl.flock(f.fileno(), fcntl.LOCK_UN)
+                unlock_file(f, how)
         self._mem = dict(live)
         self._offset = end
         self._file_records = len(live)

@@ -31,6 +31,9 @@ def _run_experiment(argv: List[str]) -> int:
     p.add_argument("--tell-order", default=None, choices=("trial", "completion"),
                    help="override schedule.tell_order")
     p.add_argument("--report-dir", default=None, help="override report_dir")
+    p.add_argument("--remote-workers", default=None, metavar="HOST:PORT,...",
+                   help="override executor.workers (comma-separated worker "
+                        "daemons) and switch the backend to remote")
     args = p.parse_args(argv)
 
     spec = ExperimentSpec.from_yaml(args.experiment)
@@ -38,6 +41,12 @@ def _run_experiment(argv: List[str]) -> int:
         spec.budget.n_trials = max(1, args.trials)
     if args.backend is not None:
         spec.executor.backend = args.backend
+    if args.remote_workers is not None:
+        spec.executor.workers = [
+            w for w in (s.strip() for s in args.remote_workers.split(",")) if w]
+        spec.executor.backend = "remote"
+        if args.workers is None:
+            spec.executor.n_workers = max(1, len(spec.executor.workers))
     if args.workers is not None:
         spec.executor.n_workers = max(1, args.workers)
     if args.schedule is not None:
@@ -80,6 +89,9 @@ def _run_sweep(argv: List[str]) -> int:
     p.add_argument("--report-dir", default=None, help="override report_dir")
     p.add_argument("--no-resume", action="store_true",
                    help="re-run every cell even when a completed report exists")
+    p.add_argument("--cell-workers", default=None, metavar="HOST:PORT,...",
+                   help="fan non-resumed cells across these worker daemons "
+                        "(comma-separated; overrides the sweep's `workers:`)")
     args = p.parse_args(argv)
 
     spec = SweepSpec.from_yaml(args.sweep)
@@ -102,9 +114,14 @@ def _run_sweep(argv: List[str]) -> int:
     if args.report_dir is not None:
         spec.report_dir = args.report_dir
 
+    cell_workers = None
+    if args.cell_workers is not None:
+        cell_workers = [
+            w for w in (s.strip() for s in args.cell_workers.split(",")) if w]
+
     try:
         report = run_sweep(spec, resume=not args.no_resume,
-                           overrides=overrides or None)
+                           overrides=overrides or None, workers=cell_workers)
     except SweepError as e:
         p.error(str(e))
     print(f"sweep {report.sweep!r}: {report.n_cells} cells "

@@ -161,14 +161,25 @@ class PrunerSpec:
 class ExecutorSpec:
     backend: str = "serial"
     n_workers: int = 1
+    workers: Optional[List[str]] = None
+    options: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
-    KEYS = ("backend", "n_workers")
+    KEYS = ("backend", "n_workers", "workers", "options")
     FIELD_DOCS = {
-        "backend": "registered executor key (`serial`/`thread`/`process` "
-                   "built in); a bare string is shorthand for "
+        "backend": "registered executor key (`serial`/`thread`/`process`/"
+                   "`remote` built in); a bare string is shorthand for "
                    "`{backend: ...}`",
         "n_workers": "worker slots (>= 1); also the default sliding-window "
-                     "size",
+                     "size.  Defaults to the length of `workers` when a "
+                     "worker pool is given, else 1",
+        "workers": "worker-daemon addresses (`[\"host:port\", ...]`) for "
+                   "the `remote` backend; forwarded to the executor "
+                   "constructor, so backends whose constructor takes no "
+                   "`workers` reject it at parse time",
+        "options": "mapping of extra executor-constructor kwargs, validated "
+                   "against the signature at parse time (e.g. `retries`, "
+                   "`heartbeat_timeout_s`, `task_timeout_s`, `fallback` "
+                   "for `remote`; `mp_context` for `process`)",
     }
 
     @classmethod
@@ -180,17 +191,51 @@ class ExecutorSpec:
         raw = _require_mapping(raw, where)
         _check_keys(raw, set(cls.KEYS), where)
         backend = str(raw.get("backend", "serial"))
-        EXECUTORS.get(backend)
-        n_workers = int(raw.get("n_workers", 1))
+        factory = EXECUTORS.get(backend)
+        workers = raw.get("workers")
+        if workers is not None:
+            if (not isinstance(workers, (list, tuple)) or not workers
+                    or not all(isinstance(w, str) for w in workers)):
+                raise ExperimentError(
+                    f"{where}: workers must be a non-empty list of "
+                    f"'host:port' strings")
+            for w in workers:
+                host, _, port = w.rpartition(":")
+                if not host or not port.isdigit():
+                    raise ExperimentError(
+                        f"{where}: worker address {w!r} is not host:port")
+            workers = [str(w) for w in workers]
+        options = raw.get("options")
+        options = dict(_require_mapping(options, f"{where}.options")) if options else {}
+        # bind workers + options against the constructor: `workers` on a
+        # backend that takes none (serial/thread/process) fails here with
+        # the constructor's own message
+        probe = dict(options)
+        if workers is not None:
+            probe["workers"] = workers
+        _check_component_kwargs(factory, probe, where)
+        n_workers = raw.get("n_workers")
+        if n_workers is None:
+            n_workers = len(workers) if workers else 1
+        n_workers = int(n_workers)
         if n_workers < 1:
             raise ExperimentError(f"{where}: n_workers must be >= 1, got {n_workers}")
-        return cls(backend=backend, n_workers=n_workers)
+        return cls(backend=backend, n_workers=n_workers, workers=workers,
+                   options=options)
 
     def to_dict(self) -> Dict[str, Any]:
-        return {"backend": self.backend, "n_workers": self.n_workers}
+        out: Dict[str, Any] = {"backend": self.backend, "n_workers": self.n_workers}
+        if self.workers is not None:
+            out["workers"] = list(self.workers)
+        if self.options:
+            out["options"] = dict(self.options)
+        return out
 
     def build(self):
-        return EXECUTORS.get(self.backend)()
+        kwargs = dict(self.options)
+        if self.workers is not None:
+            kwargs["workers"] = list(self.workers)
+        return EXECUTORS.get(self.backend)(**kwargs)
 
 
 @dataclasses.dataclass

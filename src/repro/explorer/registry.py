@@ -134,4 +134,5 @@ def ensure_builtins() -> None:
     import repro.hwgen.targets  # noqa: F401
     import repro.search.executors  # noqa: F401
     import repro.search.pruners  # noqa: F401
+    import repro.search.remote.executor  # noqa: F401
     import repro.search.samplers  # noqa: F401

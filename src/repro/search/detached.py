@@ -227,6 +227,53 @@ class StudyView:
 _DELTA_HISTORY: Dict[str, Tuple[int, Dict[int, TrialRecord]]] = {}
 
 
+def _fold_deltas(records: Dict[int, TrialRecord], deltas) -> None:
+    """Fold delta-log entries into ``records`` **in place** — every live
+    :class:`PrunerContext` holding a reference to the dict sees the new
+    history on its next ``should_prune`` call."""
+    for delta in deltas:
+        if delta[0] == "report":
+            _, number, step, value = delta
+            rec = records.get(number)
+            if rec is None:
+                rec = records[number] = TrialRecord(TrialState.RUNNING, {})
+            rec.intermediate[int(step)] = float(value)
+        else:  # "final" — terminal record supersedes streamed reports
+            _, number, state, values, intermediate = delta
+            records[number] = TrialRecord(state, dict(intermediate), values)
+
+
+def apply_pruner_deltas(context_id: str, base: int, deltas) -> int:
+    """Mid-trial refresh entry point: fold a delta-log tail starting at
+    log offset ``base`` into this process's history for ``context_id``
+    and return the resulting ``applied_len`` (the refresh ack).
+
+    Because the fold mutates the shared records dict in place, a trial
+    *already running* in this process — whose :class:`PrunerContext`
+    applied an earlier slice of the same context — sees the refreshed
+    sibling population on its very next ``should_prune`` call, letting
+    long trials prune against history that did not exist when they were
+    submitted.  Entries before the stored ``applied_len`` are skipped
+    (idempotent, same as :meth:`PrunerContext.apply`); a tail starting
+    past what this process holds is ignored — the gap cannot be
+    reconstructed, so the stale ack tells the sender to stop truncating
+    past us.
+
+    Thread-safety: the folding thread (a worker's receive loop) races
+    benignly with trial threads reading the dict — CPython dict ops are
+    atomic, records are never deleted, and a pruner that trips over a
+    concurrently-growing ``intermediate`` dict is caught by
+    ``should_prune``'s degrade-to-no-prune guard."""
+    applied, records = _DELTA_HISTORY.get(context_id, (0, {}))
+    deltas = list(deltas or ())
+    if applied < base:
+        return applied  # missed prefix: unusable, report what we hold
+    _fold_deltas(records, deltas[applied - base:])
+    applied = max(applied, base + len(deltas))
+    _DELTA_HISTORY[context_id] = (applied, records)
+    return applied
+
+
 class PrunerContext:
     """Picklable pruning snapshot shipped with a detached plan.
 
@@ -285,16 +332,7 @@ class PrunerContext:
             # then stops truncating past what this process holds)
             self._applied = (applied, None)
             return
-        for delta in (self.deltas or [])[applied - self.base:]:
-            if delta[0] == "report":
-                _, number, step, value = delta
-                rec = records.get(number)
-                if rec is None:
-                    rec = records[number] = TrialRecord(TrialState.RUNNING, {})
-                rec.intermediate[int(step)] = float(value)
-            else:  # "final" — terminal record supersedes streamed reports
-                _, number, state, values, intermediate = delta
-                records[number] = TrialRecord(state, dict(intermediate), values)
+        _fold_deltas(records, (self.deltas or [])[applied - self.base:])
         applied = max(applied, self.base + len(self.deltas or ()))
         _DELTA_HISTORY[self.context_id] = (applied, records)
         self._applied = (applied, records)

@@ -39,10 +39,11 @@ import dataclasses
 import multiprocessing
 import pickle
 import queue as queue_module
+import threading
 import traceback
 import uuid
 from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
-from typing import Any, Callable, Dict, List, Optional, Tuple, Union
+from typing import Any, Callable, Dict, Hashable, List, Optional, Tuple, Union
 
 from repro.explorer.registry import EXECUTORS
 from repro.search.detached import (
@@ -139,6 +140,180 @@ def run_detached_trial(objective: Callable, number: int, plan: DetachedSampler,
         pruner_ack=pruner.ack() if pruner is not None else None,
         error=error,
     )
+
+
+def merge_worker_result(study, trial: Trial, res: WorkerResult) -> None:
+    """Fold everything a worker-side trial accumulated — params,
+    distributions, attrs, intermediate reports — back into the parent's
+    trial before ``tell`` (shared by the process and remote backends)."""
+    trial.params.update(res.params)
+    trial.distributions.update(res.distributions)
+    trial.user_attrs.update(res.user_attrs)
+    trial.system_attrs.update(res.system_attrs)
+    trial.intermediate.update(res.intermediate)
+    with study._lock:
+        for name, dist in res.distributions.items():
+            study.distribution_registry.setdefault(name, dist)
+
+
+# ---------------------------------------------------------------------------
+# pruner delta log (shared by the process + remote backends)
+# ---------------------------------------------------------------------------
+
+class PrunerDeltaLog:
+    """Parent-side append-only log of pruning history, the O(n)-not-O(n²)
+    source for :class:`~repro.search.detached.PrunerContext` snapshots.
+
+    Instead of re-serializing the full intermediate history of every
+    trial per submission — O(trials × reports) each time — the parent
+    appends streamed ``("report", ...)`` entries and merged ``("final",
+    ...)`` terminal records here, and each submission ships only the
+    suffix past the prefix every worker has acknowledged holding.
+    Workers ack via ``WorkerResult.pruner_ack`` (and, for the remote
+    backend, ``refresh_ack`` frames), keyed by a caller-chosen worker
+    identity: the worker *pid* for the process pool, the connection's
+    worker id for remote daemons (two loopback daemons can share a pid).
+
+    Thread-safe under an internal lock: the process backend only touches
+    it from the scheduler thread, but the remote backend's per-connection
+    receiver threads append reports and acks concurrently with the
+    scheduler's snapshots."""
+
+    def __init__(self):
+        self._lock = threading.RLock()
+        self._study = None            # study the current context belongs to
+        self.context_id: Optional[str] = None
+        self._log: List[Tuple] = []
+        self._offset = 0              # global index of _log[0]
+        self._finalized: set = set()  # trial numbers with a final delta
+        self._reported: set = set()   # numbers with streamed, unfinalized reports
+        self._acked: Dict[Hashable, int] = {}  # worker key -> applied log length
+        self._pruner_ok: Dict[int, Tuple[Any, bool]] = {}  # id -> (pruner, picklable?)
+
+    def clear(self) -> None:
+        """Forget the context entirely (executor shutdown: workers died
+        with their ``_DELTA_HISTORY``, so a restart must open fresh)."""
+        with self._lock:
+            self._study = None
+            self.context_id = None
+            self._log = []
+            self._offset = 0
+            self._finalized = set()
+            self._reported = set()
+            self._acked = {}
+
+    def pruner_ok(self, pruner) -> bool:
+        """Memoized "does this pruner survive pickling" check (a failure
+        degrades that study to no worker-side pruning)."""
+        with self._lock:
+            # the memo holds a strong reference alongside the verdict:
+            # keyed by id() alone, a collected pruner's address could be
+            # reused and return the wrong cached answer
+            entry = self._pruner_ok.get(id(pruner))
+            if entry is not None and entry[0] is pruner:
+                return entry[1]
+            try:
+                pickle.dumps(pruner)
+                ok = True
+            except Exception:
+                ok = False
+            self._pruner_ok[id(pruner)] = (pruner, ok)
+            return ok
+
+    def reset(self, study) -> None:
+        """Open a fresh delta context when the study changes (a reused
+        executor), seeding the log with the history visible now."""
+        with self._lock:
+            if study is self._study:
+                return
+            self._study = study
+            self.context_id = uuid.uuid4().hex
+            self._offset = 0
+            self._acked = {}
+            self._finalized = set()
+            self._reported = set()
+            self._log = []
+            for t in study.trials:
+                if t.intermediate:
+                    self._log.append(
+                        ("final", t.number, t.state, _record_values(t.values),
+                         dict(t.intermediate)))
+                if t.state != TrialState.RUNNING:
+                    self._finalized.add(t.number)
+
+    def add_report(self, number: int, step: int, value: float) -> None:
+        """Append one streamed intermediate report."""
+        with self._lock:
+            if self.context_id is None:
+                return
+            number = int(number)
+            if number in self._finalized:
+                return  # the merged terminal record already supersedes these
+            self._reported.add(number)
+            self._log.append(("report", number, int(step), float(value)))
+
+    def finalize(self, number: int, state: TrialState,
+                 values: Any, intermediate: Dict[int, float]) -> None:
+        """Append a trial's terminal record, superseding its streamed
+        reports (an empty record drops a dead worker's partial values
+        from future snapshots)."""
+        with self._lock:
+            if self.context_id is None or number in self._finalized:
+                return
+            self._finalized.add(number)
+            if intermediate or number in self._reported:
+                self._log.append(
+                    ("final", number, state, _record_values(values),
+                     dict(intermediate)))
+            self._reported.discard(number)
+
+    def ack(self, key: Hashable, context_id: Optional[str], applied: int) -> None:
+        """Record that worker ``key`` holds the log up to ``applied``."""
+        with self._lock:
+            if context_id is not None and context_id == self.context_id:
+                self._acked[key] = max(self._acked.get(key, 0), int(applied))
+
+    def drop_worker(self, key: Hashable) -> None:
+        """Forget a dead worker's ack so truncation tracks the living."""
+        with self._lock:
+            self._acked.pop(key, None)
+
+    def truncate(self, n_workers: int) -> None:
+        """Drop the prefix every one of ``n_workers`` workers has
+        acknowledged applying.  Until all have acked at least once,
+        everything ships from the context origin — a worker that misses
+        a truncated prefix can never prune again for this study (see
+        PrunerContext), so truncation waits for proof of delivery."""
+        with self._lock:
+            if self._acked and len(self._acked) >= n_workers:
+                base = max(self._offset, min(self._acked.values()))
+                if base > self._offset:
+                    del self._log[: base - self._offset]
+                    self._offset = base
+
+    def snapshot(self, pruner, directions) -> PrunerContext:
+        """A picklable :class:`PrunerContext` of the current log slice
+        (copied under the lock: the pickling thread must not race
+        appends)."""
+        with self._lock:
+            return PrunerContext(pruner, directions,
+                                 deltas=list(self._log),
+                                 base=self._offset,
+                                 context_id=self.context_id)
+
+    def tail_for(self, key: Hashable) -> Optional[Tuple[str, int, List[Tuple]]]:
+        """The ``(context_id, base, deltas)`` slice worker ``key`` has not
+        acknowledged yet, for a mid-trial refresh push — or ``None`` when
+        there is no context or nothing new for that worker."""
+        with self._lock:
+            if self.context_id is None:
+                return None
+            acked = self._acked.get(key, 0)
+            end = self._offset + len(self._log)
+            if acked >= end:
+                return None
+            base = max(self._offset, acked)
+            return (self.context_id, base, self._log[base - self._offset:])
 
 
 # ---------------------------------------------------------------------------
@@ -318,17 +493,10 @@ class ProcessExecutor(BaseExecutor):
         self._n_workers = 0
         self._manager = None          # multiprocessing.Manager for the report channel
         self._report_queue = None     # proxy queue workers stream reports into
-        self._pruner_ok: Dict[int, Tuple[Any, bool]] = {}  # id -> (pruner, picklable?)
-        # append-only pruner-history delta log (see _pruner_context); all
-        # of it is touched only from the scheduler thread (submit +
-        # next_completed's collect thunks), so no locking is needed
-        self._pruner_study = None     # study the current log belongs to
-        self._context_id: Optional[str] = None
-        self._delta_log: List[Tuple] = []
-        self._log_offset = 0          # global index of _delta_log[0]
-        self._finalized: set = set()  # trial numbers with a final delta
-        self._reported: set = set()   # numbers with streamed, unfinalized reports
-        self._acked: Dict[int, int] = {}  # worker pid -> applied log length
+        # append-only pruner-history delta log (see _pruner_context);
+        # this backend touches it only from the scheduler thread (submit
+        # + next_completed's collect thunks), acks keyed by worker pid
+        self._delta = PrunerDeltaLog()
 
     def start(self, n_workers):
         if self._pool is not None:
@@ -347,13 +515,7 @@ class ProcessExecutor(BaseExecutor):
             self._report_queue = None
         # pool workers died with their _DELTA_HISTORY; a restarted
         # executor must open a fresh context rather than resume this log
-        self._pruner_study = None
-        self._context_id = None
-        self._delta_log = []
-        self._log_offset = 0
-        self._finalized = set()
-        self._reported = set()
-        self._acked = {}
+        self._delta.clear()
 
     def warmup(self, fn):
         """Run ``fn`` once per worker.  ``fn`` should be slow enough
@@ -367,22 +529,6 @@ class ProcessExecutor(BaseExecutor):
 
     # -- worker-side pruning ---------------------------------------------------
 
-    def _pruner_picklable(self, pruner) -> bool:
-        # the memo holds a strong reference to the pruner alongside the
-        # verdict: keyed by id() alone, a garbage-collected pruner's
-        # address could be reused by a different object and return the
-        # wrong cached answer
-        entry = self._pruner_ok.get(id(pruner))
-        if entry is not None and entry[0] is pruner:
-            return entry[1]
-        try:
-            pickle.dumps(pruner)
-            ok = True
-        except Exception:
-            ok = False  # degrade: no worker-side pruning for this study
-        self._pruner_ok[id(pruner)] = (pruner, ok)
-        return ok
-
     def _drain_reports(self) -> None:
         """Pull streamed (number, step, value) intermediate reports into
         the delta log consulted by new pruner snapshots."""
@@ -394,97 +540,29 @@ class ProcessExecutor(BaseExecutor):
                 number, step, value = q.get_nowait()
             except Exception:  # queue.Empty, or the manager going down
                 break
-            number = int(number)
-            if number in self._finalized:
-                continue  # the merged terminal record already supersedes these
-            self._reported.add(number)
-            self._delta_log.append(("report", number, int(step), float(value)))
-
-    def _reset_pruner_log(self, study) -> None:
-        """Open a fresh delta context when the study changes (a reused
-        executor), seeding the log with the history visible now."""
-        if study is self._pruner_study:
-            return
-        self._pruner_study = study
-        self._context_id = uuid.uuid4().hex
-        self._log_offset = 0
-        self._acked = {}
-        self._finalized = set()
-        self._reported = set()
-        self._delta_log = []
-        for t in study.trials:
-            if t.intermediate:
-                self._delta_log.append(
-                    ("final", t.number, t.state, _record_values(t.values),
-                     dict(t.intermediate)))
-            if t.state != TrialState.RUNNING:
-                self._finalized.add(t.number)
-
-    def _truncate_acked(self) -> None:
-        """Drop the log prefix every worker process has acknowledged
-        applying.  Until all workers have acked at least once, everything
-        ships from the context origin — a worker that misses a truncated
-        prefix can never prune again for this study (see PrunerContext),
-        so truncation waits for proof of delivery."""
-        if len(self._acked) >= self._n_workers and self._acked:
-            base = max(self._log_offset, min(self._acked.values()))
-            if base > self._log_offset:
-                del self._delta_log[: base - self._log_offset]
-                self._log_offset = base
-
-    def _finalize_delta(self, number: int, state: TrialState,
-                        values: Any, intermediate: Dict[int, float]) -> None:
-        """Append a trial's terminal record to the delta log, superseding
-        its streamed reports (an empty record drops a dead worker's
-        partial values from future snapshots)."""
-        if self._context_id is None or number in self._finalized:
-            return
-        self._finalized.add(number)
-        if intermediate or number in self._reported:
-            self._delta_log.append(
-                ("final", number, state, _record_values(values),
-                 dict(intermediate)))
-        self._reported.discard(number)
+            self._delta.add_report(number, step, value)
 
     def _pruner_context(self, study) -> Optional[PrunerContext]:
-        """Snapshot the pruner + history *slice* for one submission.
-        Called under the study lock (siblings' merged state is stable).
-
-        Instead of re-serializing the full intermediate history of every
-        trial per submission — O(trials × reports) each time, O(n²) over
-        a study — the parent keeps an append-only delta log of streamed
-        reports and merged terminal records.  Each submission ships only
-        the suffix past the prefix every worker has acknowledged holding
-        (``WorkerResult.pruner_ack``), so steady-state payloads are a
-        handful of entries regardless of study length."""
+        """Snapshot the pruner + history *slice* for one submission
+        (called under the study lock, so siblings' merged state is
+        stable).  See :class:`PrunerDeltaLog` for why a delta slice and
+        not a full history snapshot."""
         pruner = getattr(study, "pruner", None)
-        if pruner is None or not self._pruner_picklable(pruner):
+        if pruner is None or not self._delta.pruner_ok(pruner):
             return None
         if self._report_queue is None:
             ctx = multiprocessing.get_context(self.mp_context)
             self._manager = ctx.Manager()
             self._report_queue = self._manager.Queue()
-        self._reset_pruner_log(study)
+        self._delta.reset(study)
         self._drain_reports()
-        self._truncate_acked()
-        # copy: the pool's feeder thread pickles the payload while the
-        # scheduler thread may still be appending to the log
-        return PrunerContext(pruner, study.directions,
-                             deltas=list(self._delta_log),
-                             base=self._log_offset,
-                             context_id=self._context_id)
+        self._delta.truncate(self._n_workers)
+        return self._delta.snapshot(pruner, study.directions)
 
     # -- submission ------------------------------------------------------------
 
     def _merge(self, study, trial: Trial, res: WorkerResult) -> None:
-        trial.params.update(res.params)
-        trial.distributions.update(res.distributions)
-        trial.user_attrs.update(res.user_attrs)
-        trial.system_attrs.update(res.system_attrs)
-        trial.intermediate.update(res.intermediate)
-        with study._lock:
-            for name, dist in res.distributions.items():
-                study.distribution_registry.setdefault(name, dist)
+        merge_worker_result(study, trial, res)
 
     def _collect(self, study, trial: Trial, future) -> Outcome:
         try:
@@ -493,15 +571,14 @@ class ProcessExecutor(BaseExecutor):
             # retract any reports the dead worker streamed: no merge
             # happened, so later pruner snapshots must not count its
             # partial values
-            self._finalize_delta(trial.number, TrialState.FAIL, None, {})
+            self._delta.finalize(trial.number, TrialState.FAIL, None, {})
             trial.set_user_attr("error", repr(e))
             return e
         self._merge(study, trial, res)
         if res.pruner_ack is not None:
             cid, pid, applied = res.pruner_ack
-            if cid == self._context_id:
-                self._acked[pid] = max(self._acked.get(pid, 0), int(applied))
-        self._finalize_delta(res.number, res.state, res.values, res.intermediate)
+            self._delta.ack(pid, cid, applied)
+        self._delta.finalize(res.number, res.state, res.values, res.intermediate)
         if res.error is not None:
             return res.error
         return (res.values, res.state)

@@ -1,0 +1,17 @@
+"""Distributed execution: the layer between "one host" and the XLA call.
+
+* :mod:`~repro.search.remote.transport` — length-prefixed JSON/pickle
+  TCP framing, handshake (protocol version + toolchain salt);
+* :mod:`~repro.search.remote.worker` — the daemon behind
+  ``python -m repro.worker``: executes detached-plan trials and generic
+  calls, streams pruner reports, heartbeats, applies mid-trial pruner
+  refreshes;
+* :mod:`~repro.search.remote.client` — :class:`RemoteClient`, the
+  connection pool with failure detection and bounded resubmission;
+* :mod:`~repro.search.remote.executor` — :class:`RemoteExecutor`, the
+  registry-pluggable streaming executor (``executor: remote``), with
+  graceful degradation to local execution.
+
+Kept import-light: the registry's ``ensure_builtins`` imports the
+executor module; everything else loads on demand.
+"""

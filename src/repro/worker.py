@@ -1,0 +1,21 @@
+"""``python -m repro.worker`` — the remote evaluation worker daemon.
+
+Thin entry-point shim; the implementation lives in
+:mod:`repro.search.remote.worker`.  Typical launch::
+
+    python -m repro.worker --host 0.0.0.0 --port 7471 \
+        --cache-dir /shared/repro-cache
+
+Then point an experiment at it with ``executor: {backend: remote,
+workers: [host:7471, ...]}`` (or ``REPRO_REMOTE_WORKERS``).  Daemons
+execute arbitrary pickled code from connected clients — only expose
+them on trusted networks.
+"""
+from __future__ import annotations
+
+import sys
+
+from repro.search.remote.worker import main
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,585 @@
+"""Distributed execution: transport framing + handshake, the worker
+daemon, RemoteClient fault tolerance (death -> resubmit, heartbeat
+timeout, retry exhaustion), RemoteExecutor parity vs the serial
+reference at a fixed seed, mid-trial pruner refresh, graceful
+degradation, spec plumbing, the sweep-cell scheduler, and the
+shared-filesystem lock fallback.  Workers are in-process loopback
+``WorkerServer`` instances (ephemeral ports); objectives are
+module-level so they pickle by reference across the wire."""
+import errno
+import operator
+import os
+import pickle
+import subprocess
+import sys
+import threading
+import time
+import warnings
+
+import pytest
+
+from repro.search import (
+    MedianPruner,
+    ParallelStudy,
+    RandomSampler,
+    Study,
+    TrialPruned,
+    TrialState,
+)
+from repro.search.remote import transport
+from repro.search.remote.client import RemoteClient
+from repro.search.remote.executor import RemoteExecutor
+from repro.search.remote.worker import DropConnection, WorkerServer
+
+
+def _quadratic(trial):
+    x = trial.suggest_float("x", -4.0, 4.0)
+    y = trial.suggest_float("y", -4.0, 4.0)
+    return (x - 1.0) ** 2 + (y + 0.5) ** 2
+
+
+_PRUNE_BUDGET = 10
+
+
+def _prunable(trial):
+    bad = trial.number % 4 == 3
+    base = 100.0 if bad else 1.0
+    for step in range(_PRUNE_BUDGET):
+        trial.report(step, base + 0.01 * step)
+        if trial.should_prune():
+            trial.set_user_attr("steps_run", step + 1)
+            raise TrialPruned()
+        time.sleep(0.01)
+    trial.set_user_attr("steps_run", _PRUNE_BUDGET)
+    return base
+
+
+def _fingerprint(study):
+    return [(t.number, dict(t.params), t.values) for t in study.trials]
+
+
+def _start_servers(n, **kwargs):
+    servers = [WorkerServer(**kwargs) for _ in range(n)]
+    addrs = []
+    for s in servers:
+        host, port = s.start()
+        addrs.append(f"{host}:{port}")
+    return servers, addrs
+
+
+@pytest.fixture
+def pool():
+    servers, addrs = _start_servers(2)
+    yield addrs
+    for s in servers:
+        s.stop()
+
+
+# ---------------------------------------------------------------------------
+# transport: framing + handshake
+# ---------------------------------------------------------------------------
+
+def test_frame_roundtrip_over_socketpair():
+    import socket
+
+    a, b = socket.socketpair()
+    left, right = transport.Connection(a), transport.Connection(b)
+    try:
+        left.send("submit", {"task": "t1"}, b"\x00payload\xff")
+        msg = right.recv(timeout=2.0)
+        assert (msg.kind, msg.meta, msg.payload) == \
+            ("submit", {"task": "t1"}, b"\x00payload\xff")
+        # empty-payload control frame
+        right.send("heartbeat", {"n": 3})
+        msg = left.recv(timeout=2.0)
+        assert msg.kind == "heartbeat" and msg.meta == {"n": 3} and msg.payload == b""
+        # no frame pending: timeout yields None, stream stays usable
+        assert left.recv(timeout=0.05) is None
+        right.send("bye")
+        assert left.recv(timeout=2.0).kind == "bye"
+    finally:
+        left.close()
+        right.close()
+
+
+def test_recv_raises_closed_on_eof():
+    import socket
+
+    a, b = socket.socketpair()
+    left, right = transport.Connection(a), transport.Connection(b)
+    right.close()
+    with pytest.raises(transport.ConnectionClosed):
+        left.recv(timeout=2.0)
+    left.close()
+
+
+def test_parse_addr():
+    assert transport.parse_addr("10.0.0.2:7471") == ("10.0.0.2", 7471)
+    for bad in ("nope", ":7471", "host:", "host:port"):
+        with pytest.raises(ValueError, match="host:port"):
+            transport.parse_addr(bad)
+
+
+def test_handshake_protocol_mismatch_rejected(pool):
+    conn = transport.connect(pool[0])
+    try:
+        with pytest.raises(transport.HandshakeError, match="protocol mismatch"):
+            transport.client_hello(conn, hello_meta={"protocol": 999})
+    finally:
+        conn.close()
+
+
+def test_handshake_toolchain_mismatch_rejected():
+    servers, addrs = _start_servers(1, toolchain={"jax": "not-what-you-have"})
+    try:
+        conn = transport.connect(addrs[0])
+        try:
+            with pytest.raises(transport.HandshakeError, match="toolchain mismatch"):
+                transport.client_hello(conn)
+        finally:
+            conn.close()
+        # the pool client treats a rejecting worker as absent, with a warning
+        client = RemoteClient(addrs)
+        with pytest.warns(RuntimeWarning, match="rejected the handshake"):
+            live = client.connect()
+        assert live == []
+        client.close()
+    finally:
+        for s in servers:
+            s.stop()
+
+
+# ---------------------------------------------------------------------------
+# RemoteClient: dispatch + fault tolerance (stubbed failure seams)
+# ---------------------------------------------------------------------------
+
+def _call_payload(fn, *args):
+    blob = pickle.dumps(("call", (fn, args, {})), protocol=pickle.HIGHEST_PROTOCOL)
+    return lambda: blob
+
+
+class _Done:
+    def __init__(self):
+        self.event = threading.Event()
+        self.value = self.error = self.worker = None
+
+    def __call__(self, key, value, error, worker_addr):
+        self.value, self.error, self.worker = value, error, worker_addr
+        self.event.set()
+
+
+def test_client_runs_generic_calls(pool):
+    client = RemoteClient(pool)
+    assert sorted(client.connect()) == sorted(pool)
+    try:
+        done = _Done()
+        client.submit("k", _call_payload(operator.add, 2, 3), done)
+        assert done.event.wait(10.0)
+        assert done.error is None and done.value == 5
+        assert done.worker in pool
+    finally:
+        client.close()
+
+
+def test_worker_death_resubmits_to_sibling():
+    class DieOnce:
+        def __init__(self):
+            self.dropped = False
+
+        def __call__(self, task_id, task):
+            if not self.dropped:
+                self.dropped = True
+                raise DropConnection()
+
+    hook = DieOnce()
+    flaky, flaky_addrs = _start_servers(1, task_hook=hook)
+    steady, steady_addrs = _start_servers(1)
+    client = RemoteClient(flaky_addrs + steady_addrs, retries=2)
+    try:
+        client.connect()
+        done = _Done()
+        with pytest.warns(RuntimeWarning, match="lost"):
+            # dispatch order follows connect order: the first (flaky)
+            # worker gets the task and severs the connection
+            client.submit("k", _call_payload(operator.mul, 6, 7), done)
+            assert done.event.wait(10.0)
+        assert hook.dropped
+        assert done.error is None and done.value == 42
+        assert done.worker == steady_addrs[0]  # the sibling finished it
+    finally:
+        client.close()
+        for s in flaky + steady:
+            s.stop()
+
+
+def test_retries_exhausted_surfaces_error():
+    def die(task_id, task):
+        raise DropConnection()
+
+    servers, addrs = _start_servers(2, task_hook=die)
+    client = RemoteClient(addrs, retries=0)
+    try:
+        client.connect()
+        done = _Done()
+        with pytest.warns(RuntimeWarning, match="lost"):
+            client.submit("k", _call_payload(operator.add, 1, 1), done)
+            assert done.event.wait(10.0)
+        assert done.value is None
+        assert "attempts" in str(done.error)
+    finally:
+        client.close()
+        for s in servers:
+            s.stop()
+
+
+def test_heartbeat_timeout_declares_worker_lost():
+    hang = threading.Event()
+    # heartbeat_s=0: the daemon never heartbeats; the hook wedges the
+    # task, so the client sees acks then total silence
+    servers, addrs = _start_servers(
+        1, heartbeat_s=0, task_hook=lambda tid, task: hang.wait(30.0))
+    client = RemoteClient(addrs, retries=0, heartbeat_timeout_s=0.5)
+    try:
+        client.connect()
+        done = _Done()
+        with pytest.warns(RuntimeWarning, match="lost"):
+            client.submit("k", _call_payload(operator.add, 1, 1), done)
+            assert done.event.wait(10.0)
+        assert done.value is None
+        assert "silent" in str(done.error)
+        assert client.live_workers() == []
+    finally:
+        hang.set()
+        client.close()
+        for s in servers:
+            s.stop()
+
+
+def test_submit_with_dead_pool_fails_inline():
+    client = RemoteClient(["127.0.0.1:9"], connect_timeout_s=0.2)
+    with pytest.warns(RuntimeWarning, match="unreachable"):
+        assert client.connect() == []
+    done = _Done()
+    client.submit("k", _call_payload(operator.add, 1, 1), done)
+    assert done.event.is_set()
+    assert "no live remote workers" in str(done.error)
+    client.close()
+
+
+# ---------------------------------------------------------------------------
+# RemoteExecutor: fixed-seed parity, pruning, degradation, env plumbing
+# ---------------------------------------------------------------------------
+
+def test_remote_parity_with_serial_reference(pool):
+    ref = Study(sampler=RandomSampler(seed=7))
+    ref.optimize(_quadratic, 10)
+    s = ParallelStudy(sampler=RandomSampler(seed=7), n_workers=2,
+                      backend=RemoteExecutor(workers=pool),
+                      schedule="sliding_window", tell_order="completion")
+    s.optimize(_quadratic, 10)
+    assert _fingerprint(s) == _fingerprint(ref)
+    assert s.best_trial.number == ref.best_trial.number
+    assert s.best_trial.values == ref.best_trial.values
+
+
+def test_remote_parity_survives_worker_death():
+    """Kill one of two workers on its first task: bounded resubmission
+    must finish the run with the exact serial-reference trials — the
+    detached-plan determinism the fault story rests on."""
+    class DieOnce:
+        def __init__(self):
+            self.dropped = False
+
+        def __call__(self, task_id, task):
+            if not self.dropped:
+                self.dropped = True
+                raise DropConnection()
+
+    hook = DieOnce()
+    flaky, flaky_addrs = _start_servers(1, task_hook=hook)
+    steady, steady_addrs = _start_servers(1)
+    try:
+        ref = Study(sampler=RandomSampler(seed=11))
+        ref.optimize(_quadratic, 8)
+        s = ParallelStudy(sampler=RandomSampler(seed=11), n_workers=2,
+                          backend=RemoteExecutor(workers=flaky_addrs + steady_addrs),
+                          schedule="sliding_window", tell_order="completion")
+        with pytest.warns(RuntimeWarning, match="lost"):
+            s.optimize(_quadratic, 8)
+        assert hook.dropped
+        assert all(t.state == TrialState.COMPLETE for t in s.trials)
+        assert _fingerprint(s) == _fingerprint(ref)
+    finally:
+        for srv in flaky + steady:
+            srv.stop()
+
+
+def test_remote_prunes_worker_side(pool):
+    s = ParallelStudy(sampler=RandomSampler(seed=0), n_workers=2,
+                      backend=RemoteExecutor(workers=pool),
+                      schedule="sliding_window", tell_order="completion",
+                      pruner=MedianPruner(n_startup_trials=2))
+    s.optimize(_prunable, 12)
+    pruned = [t for t in s.trials if t.state == TrialState.PRUNED]
+    assert pruned, "expected doomed trials to be pruned inside remote workers"
+    for t in pruned:
+        assert t.user_attrs["steps_run"] < _PRUNE_BUDGET
+        assert t.intermediate  # streamed report frames merged back
+    complete = [t for t in s.trials if t.state == TrialState.COMPLETE]
+    assert all(t.user_attrs["steps_run"] == _PRUNE_BUDGET for t in complete)
+
+
+def test_no_reachable_workers_degrades_to_fallback():
+    ex = RemoteExecutor(workers=["127.0.0.1:9"], connect_timeout_s=0.2,
+                        fallback="serial")
+    ref = Study(sampler=RandomSampler(seed=5))
+    ref.optimize(_quadratic, 5)
+    s = ParallelStudy(sampler=RandomSampler(seed=5), n_workers=2,
+                      backend=ex, schedule="sliding_window")
+    with pytest.warns(RuntimeWarning, match="degrading"):
+        s.optimize(_quadratic, 5)
+    assert all(t.state == TrialState.COMPLETE for t in s.trials)
+    assert _fingerprint(s) == _fingerprint(ref)
+
+
+def test_executor_requires_a_worker_pool(monkeypatch):
+    monkeypatch.delenv("REPRO_REMOTE_WORKERS", raising=False)
+    with pytest.raises(ValueError, match="REPRO_REMOTE_WORKERS"):
+        RemoteExecutor().start(1)
+
+
+def test_executor_reads_workers_from_env(pool, monkeypatch):
+    monkeypatch.setenv("REPRO_REMOTE_WORKERS", ",".join(pool))
+    ex = RemoteExecutor()
+    ex.start(2)
+    try:
+        assert sorted(ex._client.live_workers()) == sorted(pool)
+    finally:
+        ex.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# mid-trial pruner refresh: the delta fold is shared and in-place
+# ---------------------------------------------------------------------------
+
+def test_apply_pruner_deltas_refreshes_live_contexts():
+    from repro.search.detached import (
+        _DELTA_HISTORY,
+        PrunerContext,
+        apply_pruner_deltas,
+    )
+
+    cid = "ctx-refresh-test"
+    try:
+        ctx = PrunerContext(MedianPruner(n_startup_trials=0), ("minimize",),
+                            deltas=[("report", 0, 0, 1.0)], base=0,
+                            context_id=cid)
+        ctx.apply()
+        assert _DELTA_HISTORY[cid][0] == 1
+        # a refresh arriving while ctx's trial runs: same records dict,
+        # so the running trial's next should_prune sees trial 1
+        assert apply_pruner_deltas(cid, 1, [("report", 1, 0, 5.0)]) == 2
+        assert 1 in ctx._applied[1]
+        assert ctx._applied[1][1].intermediate == {0: 5.0}
+        # idempotent replay of an already-applied slice
+        assert apply_pruner_deltas(
+            cid, 0, [("report", 0, 0, 1.0), ("report", 1, 0, 5.0)]) == 2
+        assert ctx._applied[1][0].intermediate == {0: 1.0}
+        # a tail starting past what we hold is unusable: ack what we have
+        assert apply_pruner_deltas(cid, 10, [("report", 9, 0, 1.0)]) == 2
+        # terminal record supersedes streamed reports
+        apply_pruner_deltas(
+            cid, 2, [("final", 0, TrialState.COMPLETE, (1.5,), {0: 1.0})])
+        assert ctx._applied[1][0].state == TrialState.COMPLETE
+    finally:
+        _DELTA_HISTORY.pop(cid, None)
+
+
+# ---------------------------------------------------------------------------
+# spec plumbing: executor.workers in the YAML surface
+# ---------------------------------------------------------------------------
+
+def test_executor_spec_workers_plumbing():
+    from repro.explorer.experiment import ExecutorSpec, ExperimentError
+
+    spec = ExecutorSpec.from_raw({"backend": "remote",
+                                  "workers": ["h:7471", "g:7472"]})
+    assert spec.n_workers == 2  # defaults to the pool size
+    assert spec.to_dict() == {"backend": "remote", "n_workers": 2,
+                              "workers": ["h:7471", "g:7472"]}
+    # options bind against the constructor signature at parse time
+    spec = ExecutorSpec.from_raw({"backend": "remote", "workers": ["h:1"],
+                                  "options": {"retries": 5, "fallback": "serial"}})
+    assert spec.options == {"retries": 5, "fallback": "serial"}
+    with pytest.raises(ExperimentError):
+        ExecutorSpec.from_raw({"backend": "remote", "workers": ["h:1"],
+                               "options": {"bogus": 1}})
+    # backends without a worker pool reject `workers` at parse time
+    with pytest.raises(ExperimentError):
+        ExecutorSpec.from_raw({"backend": "serial", "workers": ["h:1"]})
+    with pytest.raises(ExperimentError, match="host:port"):
+        ExecutorSpec.from_raw({"backend": "remote", "workers": ["nope"]})
+    with pytest.raises(ExperimentError, match="non-empty"):
+        ExecutorSpec.from_raw({"backend": "remote", "workers": []})
+    # legacy round-trip shape untouched (persisted-report resume)
+    assert ExecutorSpec.from_raw("serial").to_dict() == \
+        {"backend": "serial", "n_workers": 1}
+
+
+# ---------------------------------------------------------------------------
+# sweep-cell scheduler: fan cells across the pool, resume still works
+# ---------------------------------------------------------------------------
+
+TINY_SPACE = {
+    "input": [2, 64],
+    "output": 3,
+    "sequence": [
+        {"block": "features", "op_candidates": "conv1d",
+         "conv1d": {"kernel_size": [3, 5], "out_channels": [4, 8]}},
+        {"block": "head", "op_candidates": "linear",
+         "linear": {"width": [8, 16]}},
+    ],
+}
+
+
+def _tiny_sweep(tmp_path):
+    return {
+        "name": "remote-sweep",
+        "base": {
+            "name": "tiny",
+            "search_space": TINY_SPACE,
+            "sampler": {"name": "random", "seed": 0},
+            "executor": {"backend": "serial"},
+            "criteria": [{"estimator": "flops", "kind": "objective",
+                          "weight": 1.0}],
+            "budget": {"n_trials": 3},
+        },
+        "axes": {"targets": ["host_cpu", "edge_npu"]},
+        "report_dir": str(tmp_path / "results"),
+    }
+
+
+def test_sweep_cells_fan_across_workers(tmp_path, pool):
+    from repro.explorer.sweep import SweepSpec, run_sweep
+
+    spec = SweepSpec.from_dict(_tiny_sweep(tmp_path))
+    report = run_sweep(spec, workers=list(pool))
+    assert report.n_cells == 2 and report.n_resumed == 0
+    assert all(c["best"] is not None for c in report.cells)
+    # the parent persisted each worker-computed report at the local cell
+    # path, so a re-run resumes every cell instead of recomputing
+    for cell in spec.expand():
+        assert os.path.exists(cell.report_path)
+    again = run_sweep(SweepSpec.from_dict(_tiny_sweep(tmp_path)))
+    assert again.n_resumed == 2
+    assert [c["best"]["values"] for c in again.cells] == \
+        [c["best"]["values"] for c in report.cells]
+
+
+def test_sweep_remote_matches_local_reports(tmp_path, pool):
+    from repro.explorer.sweep import SweepSpec, run_sweep
+
+    raw = _tiny_sweep(tmp_path)
+    local = run_sweep(SweepSpec.from_dict(raw), save_report=False)
+    raw["report_dir"] = str(tmp_path / "results2")
+    remote = run_sweep(SweepSpec.from_dict(raw), save_report=False,
+                       workers=list(pool))
+    assert [c["best"]["values"] for c in remote.cells] == \
+        [c["best"]["values"] for c in local.cells]
+    assert [c["name"] for c in remote.cells] == [c["name"] for c in local.cells]
+
+
+def test_sweep_unreachable_pool_falls_back_to_local(tmp_path):
+    from repro.explorer.sweep import SweepSpec, run_sweep
+
+    spec = SweepSpec.from_dict(_tiny_sweep(tmp_path))
+    with pytest.warns(RuntimeWarning):
+        report = run_sweep(spec, workers=["127.0.0.1:9"])
+    assert report.n_cells == 2
+    assert all(c["best"] is not None for c in report.cells)
+
+
+# ---------------------------------------------------------------------------
+# shared-filesystem robustness + worker cache plumbing
+# ---------------------------------------------------------------------------
+
+def test_flock_fallback_to_lockf(tmp_path, monkeypatch):
+    from repro import ioutils
+
+    def no_flock(fd, op):
+        raise OSError(errno.ENOLCK, "No locks available")
+
+    monkeypatch.setattr(ioutils.fcntl, "flock", no_flock)
+    path = str(tmp_path / "store.jsonl")
+    try:
+        with pytest.warns(RuntimeWarning, match="flock unsupported"):
+            ioutils.locked_append(path, "a\n")
+        # the path is remembered: no re-probe, no second warning
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            ioutils.locked_append(path, "b\n")
+        with open(path) as f:
+            assert f.read() == "a\nb\n"
+    finally:
+        ioutils._FLOCK_UNSUPPORTED.discard(path)
+
+
+def test_cache_dir_env_redirects_store(tmp_path, monkeypatch):
+    from repro.evaluation.disk_cache import DiskEvaluationCache
+
+    store = tmp_path / "shared-store"
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(store))
+    cache = DiskEvaluationCache(path=str(tmp_path / "ignored"))
+    assert cache.path == str(store)
+    assert store.is_dir()
+    assert not (tmp_path / "ignored").exists()
+
+
+# ---------------------------------------------------------------------------
+# the CLI daemon end-to-end (subprocess)
+# ---------------------------------------------------------------------------
+
+def test_worker_cli_subprocess_roundtrip(tmp_path):
+    import repro
+
+    src = os.path.dirname(os.path.dirname(os.path.abspath(repro.__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.worker", "--no-warmup", "--port", "0",
+         "--cache-dir", str(tmp_path / "cache")],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True, env=env)
+    try:
+        addr = None
+        deadline = time.monotonic() + 60.0
+        while time.monotonic() < deadline:
+            line = proc.stdout.readline()
+            if not line:
+                break
+            if line.startswith("listening on "):
+                addr = line.split()[-1].strip()
+                break
+        assert addr, "daemon never printed its bound address"
+        conn = transport.connect(addr)
+        try:
+            hello = transport.client_hello(conn)
+            assert hello.get("worker")
+            conn.send("submit", {"task": "t1"},
+                      pickle.dumps(("call", (operator.add, (2, 3), {})),
+                                   protocol=pickle.HIGHEST_PROTOCOL))
+            result = None
+            deadline = time.monotonic() + 30.0
+            while time.monotonic() < deadline:
+                msg = conn.recv(timeout=1.0)
+                if msg is None or msg.kind in ("ack", "heartbeat"):
+                    continue
+                result = msg
+                break
+            assert result is not None and result.kind == "result"
+            assert pickle.loads(result.payload) == 5
+            conn.send("bye")
+        finally:
+            conn.close()
+    finally:
+        proc.terminate()
+        proc.wait(timeout=10.0)

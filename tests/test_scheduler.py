@@ -19,7 +19,31 @@ from repro.search import (
     TrialState,
 )
 
-BACKENDS = ("serial", "thread", "process")
+BACKENDS = ("serial", "thread", "process", "remote")
+
+
+@pytest.fixture(scope="module")
+def remote_pool():
+    """Two in-process loopback worker daemons shared by this module's
+    remote-backend parametrizations."""
+    from repro.search.remote.worker import WorkerServer
+
+    servers = [WorkerServer() for _ in range(2)]
+    addrs = ["%s:%d" % s.start() for s in servers]
+    yield addrs
+    for s in servers:
+        s.stop()
+
+
+def _backend(name, request):
+    """Resolve a BACKENDS entry for ParallelStudy: plain names pass
+    through; `remote` needs a constructed executor holding the loopback
+    pool (one instance per study, like a YAML-built run)."""
+    if name == "remote":
+        from repro.search.remote.executor import RemoteExecutor
+
+        return RemoteExecutor(workers=list(request.getfixturevalue("remote_pool")))
+    return name
 
 
 def _quadratic(trial):
@@ -44,12 +68,13 @@ def _fingerprint(study):
 
 @pytest.mark.parametrize("backend", BACKENDS)
 @pytest.mark.parametrize("tell_order", ("trial", "completion"))
-def test_sliding_matches_batch_random(backend, tell_order):
+def test_sliding_matches_batch_random(backend, tell_order, request):
     ref = ParallelStudy(sampler=RandomSampler(seed=3), n_workers=3,
-                        backend=backend, schedule="batch")
+                        backend=_backend(backend, request), schedule="batch")
     ref.optimize(_quadratic, 11)
     s = ParallelStudy(sampler=RandomSampler(seed=3), n_workers=3,
-                      backend=backend, schedule="sliding_window",
+                      backend=_backend(backend, request),
+                      schedule="sliding_window",
                       tell_order=tell_order)
     s.optimize(_quadratic, 11)
     assert _fingerprint(s) == _fingerprint(ref)
@@ -58,12 +83,13 @@ def test_sliding_matches_batch_random(backend, tell_order):
 
 
 @pytest.mark.parametrize("backend", BACKENDS)
-def test_sliding_matches_batch_grid(backend):
+def test_sliding_matches_batch_grid(backend, request):
     ref = ParallelStudy(sampler=GridSampler(seed=0), n_workers=3,
-                        backend=backend, schedule="batch")
+                        backend=_backend(backend, request), schedule="batch")
     ref.optimize(_grid_obj, 6)
     s = ParallelStudy(sampler=GridSampler(seed=0), n_workers=3,
-                      backend=backend, schedule="sliding_window",
+                      backend=_backend(backend, request),
+                      schedule="sliding_window",
                       tell_order="completion")
     s.optimize(_grid_obj, 6)
     # full 2x3 product, identical coverage and winner
