@@ -1227,6 +1227,50 @@ def bench_kernel_tune(quick: bool = False) -> None:
          f"best_match={best_match}")
 
 
+def bench_faults(quick: bool = False) -> None:
+    """Fault-injection hot-path cost.  The contract: with no plan
+    installed, every ``fault_point`` call is one global load + ``is
+    None`` test — storage and transport seams pay nothing for being
+    injectable.  Armed cost (a plan whose rules all target *other*
+    sites) bounds the rule-scan overhead chaos runs actually pay."""
+    import tempfile
+
+    from repro import faults
+    from repro.evaluation.disk_cache import DiskEvaluationCache
+    from repro.faults import FaultPlan
+
+    n = 20_000 if quick else 200_000
+    line = '{"kind": "trial", "number": 7}\n'
+
+    faults.uninstall()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        faults.fault_point("study.persist", line)
+    off = (time.perf_counter() - t0) / n
+    emit("faults/point_disabled", off, f"n={n}")
+
+    faults.install(FaultPlan.from_string(
+        "compile:delay@p=0.01;transport.send:drop@p=0.01"))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        faults.fault_point("study.persist", line)
+    armed = (time.perf_counter() - t0) / n
+    faults.uninstall()
+    emit("faults/point_armed_other_sites", armed,
+         f"x{armed / max(off, 1e-12):.1f} vs disabled")
+
+    # the seam in situ: disk-cache store+lookup throughput, plan off
+    rounds = 200 if quick else 1000
+    with tempfile.TemporaryDirectory() as d:
+        cache = DiskEvaluationCache(path=d)
+        t0 = time.perf_counter()
+        for i in range(rounds):
+            cache.store(("bench", i), {"v": i})
+            cache.lookup(("bench", i))
+        dt = (time.perf_counter() - t0) / rounds
+    emit("faults/disk_cache_roundtrip_off", dt, f"rounds={rounds}")
+
+
 def main() -> None:
     bench_samplers()
     bench_builder_throughput()
@@ -1238,6 +1282,7 @@ def main() -> None:
     bench_cascade()
     bench_async_scheduler()
     bench_kernel_tune()
+    bench_faults()
     bench_parallel_engine()
     bench_process_engine()
     bench_remote_engine()
@@ -1270,5 +1315,6 @@ if __name__ == "__main__":
         bench_async_scheduler(quick=True)
         bench_cascade(quick=True)
         bench_kernel_tune(quick=True)
+        bench_faults(quick=True)
     else:
         main()

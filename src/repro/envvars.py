@@ -112,6 +112,19 @@ def _positive_float(raw: str) -> float:
     return value
 
 
+def _faults_plan(raw: str):
+    # Deferred import: repro.faults is stdlib-only, but envvars must not
+    # pull it in unless the knob is actually set.
+    from repro.faults import FaultPlan
+
+    try:
+        return FaultPlan.from_string(raw)
+    except ValueError:
+        raise
+    except Exception as e:  # int()/float() garbage inside a rule param
+        raise ValueError(str(e))
+
+
 def _addr_list(raw: str) -> list:
     addrs = [part.strip() for part in raw.split(",") if part.strip()]
     for addr in addrs:
@@ -282,6 +295,46 @@ register_env(EnvVar(
     default="8 (the full built-in candidate grid)",
     malformed="warns and uses the default",
     consulted_by="`repro/hwgen/autotune.py`",
+))
+
+register_env(EnvVar(
+    name="REPRO_FAULTS",
+    parse=_faults_plan,
+    expected=("a fault-plan string: `seed=N;site:action[@k=v,...];...` "
+              "(see `repro/faults.py`)"),
+    description=(
+        "Deterministic fault-injection plan, installed at import and "
+        "inherited by spawned process workers and `python -m "
+        "repro.worker` daemons.  Rules name a site "
+        "(`disk_cache.read/write`, `study.persist`, "
+        "`transport.send/recv`, `worker.trial`, `executor.submit`, "
+        "`compile`) and an action (`raise`, `kill`, `delay`, `corrupt`, "
+        "`drop`), with optional `p=`, `times=`, `after=`, `delay_s=`, "
+        "and `key=` params — e.g. "
+        "`seed=7;worker.trial:kill@key=3,times=2;disk_cache.write:corrupt@p=0.25`.  "
+        "A `faults:` section in the experiment spec wins over the "
+        "environment for the run and is re-exported to it so workers "
+        "see the same plan."),
+    default="unset — injection disabled, the fault points are no-ops",
+    malformed="warns and leaves injection disabled",
+    consulted_by="`repro/faults.py`",
+))
+
+register_env(EnvVar(
+    name="REPRO_QUARANTINE_DEATHS",
+    parse=_positive_int,
+    expected="a positive integer",
+    description=(
+        "How many worker deaths one trial may be implicated in before "
+        "the process/remote executor quarantines it: the trial is told "
+        "`FAIL` with `user_attrs[\"quarantined\"]` set instead of being "
+        "resubmitted, so a poison trial (one that OOM-kills or "
+        "segfaults every worker it lands on) cannot burn its retries "
+        "across every sibling and drain the pool.  The "
+        "`quarantine_after` executor option wins over the environment."),
+    default="2",
+    malformed="warns and uses the default",
+    consulted_by="`repro/search/executors.py`, `repro/search/remote/executor.py`",
 ))
 
 register_env(EnvVar(

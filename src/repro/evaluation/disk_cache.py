@@ -9,7 +9,11 @@ architecture at most once per host:
 
   * layout: one append-only JSONL file, ``entries.jsonl``, inside the
     store directory (default ``results/cache/``), one record per value:
-    ``{"key": <canonical key>, "value": <scalar>}``;
+    ``{"key": <canonical key>, "value": <scalar>, "crc": <crc32>}`` —
+    the CRC32 covers key+value, so bit rot that still parses as JSON
+    reads back as a miss (and is dropped at compaction), never as a
+    wrong compiled-latency value; pre-CRC records (no ``crc`` field)
+    are accepted and re-checksummed by the next compaction;
   * keys are the cache's own tuples — estimator name, target, batch,
     full architecture signature (layers AND pre-processing) — wrapped
     together with a **toolchain salt** (the jax/jaxlib versions, see
@@ -75,8 +79,11 @@ from __future__ import annotations
 import json
 import os
 import threading
+import warnings
+import zlib
 from typing import Any, Dict, Hashable, List, Optional, Tuple
 
+from repro import faults
 from repro.envvars import read_env
 from repro.ioutils import lock_file, locked_append, unlock_file
 
@@ -145,6 +152,35 @@ def canonical_key(key: Hashable) -> Optional[str]:
                       sort_keys=True, separators=(",", ":"))
 
 
+def _record_crc(key: str, value: Any) -> int:
+    """CRC32 integrity checksum over the record's canonical content.
+    Bit rot or a mangled write that still parses as JSON must read back
+    as a *miss*, never as a wrong compiled-latency value."""
+    return zlib.crc32(json.dumps([key, value], sort_keys=True,
+                                 separators=(",", ":")).encode("utf-8"))
+
+
+def _record_line(key: str, value: Any) -> str:
+    return json.dumps({"key": key, "value": value,
+                       "crc": _record_crc(key, value)}) + "\n"
+
+
+def _record_value(rec: Any) -> Tuple[Optional[str], Any, str]:
+    """Validate one parsed record -> (key, value, status), status one of
+    ``"ok"`` | ``"skip"`` (not a value record) | ``"corrupt"`` (checksum
+    mismatch).  Records written before checksums (no ``crc`` field) are
+    accepted as-is; a present checksum must match or the record is
+    dropped — a miss and a recompute, never a wrong value."""
+    if not isinstance(rec, dict):
+        return None, None, "skip"
+    key = rec.get("key")
+    if not isinstance(key, str) or "value" not in rec:
+        return None, None, "skip"
+    if "crc" in rec and rec["crc"] != _record_crc(key, rec["value"]):
+        return None, None, "corrupt"
+    return key, rec["value"], "ok"
+
+
 class DiskEvaluationCache:
     """Append-only JSONL value store, safe across threads and processes,
     with optional size-capped LRU compaction (see module docstring)."""
@@ -173,6 +209,8 @@ class DiskEvaluationCache:
         self.compactions = 0
         self.dropped_superseded = 0
         self.dropped_lru = 0
+        self.corrupt_records = 0  # checksum/parse failures seen on read
+        self.dropped_corrupt = 0  # corrupt records removed by compaction
         os.makedirs(self.path, exist_ok=True)
         self.refresh()  # warm load at construction
 
@@ -214,9 +252,12 @@ class DiskEvaluationCache:
             self._mem.clear()
             self._offset = 0
             self._file_records = 0
-        with open(self._file, "rb") as f:
-            f.seek(self._offset)
-            data = f.read()
+        try:
+            with open(self._file, "rb") as f:
+                f.seek(self._offset)
+                data = f.read()
+        except OSError:
+            return 0  # store vanished / unreadable: degrade to misses
         lines = data.split(b"\n")
         # the final element is b"" after a complete record, or the torn
         # tail of an append in progress — leave it for the next refresh
@@ -227,14 +268,26 @@ class DiskEvaluationCache:
                 continue
             self._file_records += 1
             try:
+                raw = faults.fault_point("disk_cache.read", raw)
+            except faults.InjectedFault:
+                self.corrupt_records += 1
+                continue
+            if raw is faults.DROP:
+                continue
+            try:
                 rec = json.loads(raw.decode("utf-8"))
             except (UnicodeDecodeError, json.JSONDecodeError):
-                continue  # corrupt line: skip rather than poison the run
-            key = rec.get("key")
-            if isinstance(key, str) and "value" in rec:
+                # corrupt line: skip rather than poison the run
+                self.corrupt_records += 1
+                continue
+            key, value, status = _record_value(rec)
+            if status == "corrupt":
+                self.corrupt_records += 1
+                continue
+            if status == "ok":
                 # re-insert so a key re-appended by a sibling ranks recent
                 self._mem.pop(key, None)
-                self._mem[key] = rec["value"]
+                self._mem[key] = value
                 n += 1
         return n
 
@@ -268,7 +321,18 @@ class DiskEvaluationCache:
                 self._mem.pop(ck)
                 self._mem[ck] = value
                 return True
-            locked_append(self._file, json.dumps({"key": ck, "value": value}) + "\n")
+            line = faults.fault_point("disk_cache.write", _record_line(ck, value))
+            if line is not faults.DROP:
+                try:
+                    locked_append(self._file, line)
+                except (OSError, faults.InjectedFault) as e:
+                    # a full/unwritable/faulted store must not fail the
+                    # study — the value stays resident in memory and the
+                    # cache degrades to recomputes in other processes
+                    warnings.warn(
+                        f"disk cache append to {self._file!r} failed "
+                        f"({e!r}); keeping the value in memory only",
+                        RuntimeWarning, stacklevel=3)
             self._mem[ck] = value
             # consume the tail (our own append + anything siblings added)
             # instead of bumping a counter: the next _read_new would
@@ -296,17 +360,22 @@ class DiskEvaluationCache:
                 # appended records this process has never seen, and the
                 # cap applies to the union
                 entries: Dict[str, Any] = {}
+                corrupt = 0
                 for raw in f.read().split(b"\n"):
                     if not raw.strip():
                         continue
                     try:
                         rec = json.loads(raw.decode("utf-8"))
                     except (UnicodeDecodeError, json.JSONDecodeError):
+                        corrupt += 1
                         continue  # corrupt line: compacted away
-                    key = rec.get("key")
-                    if isinstance(key, str) and "value" in rec:
+                    key, value, status = _record_value(rec)
+                    if status == "corrupt":
+                        corrupt += 1
+                        continue
+                    if status == "ok":
                         entries.pop(key, None)  # keep-last, ranked by file order
-                        entries[key] = rec["value"]
+                        entries[key] = value
                 current = _toolchain_salt()
                 live: Dict[str, Any] = {}
                 for key, value in entries.items():
@@ -332,9 +401,10 @@ class DiskEvaluationCache:
                     del live[key]
                 f.seek(0)
                 f.truncate()
+                # the rewrite re-checksums every surviving record, which
+                # also upgrades pre-CRC legacy records in place
                 for key, value in live.items():
-                    f.write((json.dumps({"key": key, "value": value}) + "\n")
-                            .encode("utf-8"))
+                    f.write(_record_line(key, value).encode("utf-8"))
                 f.flush()
                 os.fsync(f.fileno())
                 end = f.tell()
@@ -352,6 +422,7 @@ class DiskEvaluationCache:
         self.compactions += 1
         self.dropped_superseded += superseded
         self.dropped_lru += lru
+        self.dropped_corrupt += corrupt
 
     def stats(self) -> Dict[str, int]:
         """Hygiene counters for reports: resident entries + what
@@ -362,6 +433,8 @@ class DiskEvaluationCache:
                 "compactions": self.compactions,
                 "dropped_superseded": self.dropped_superseded,
                 "dropped_lru": self.dropped_lru,
+                "corrupt_records": self.corrupt_records,
+                "dropped_corrupt": self.dropped_corrupt,
             }
 
     def clear(self) -> None:

@@ -693,10 +693,67 @@ class KernelTuningSpec:
         return d
 
 
+@dataclasses.dataclass
+class FaultsSpec:
+    """Deterministic fault injection (chaos testing a run on purpose).
+
+    The section validates into a :class:`repro.faults.FaultPlan`;
+    :meth:`Explorer.run` installs it for the run's duration and exports
+    it through ``REPRO_FAULTS`` so spawned process workers inherit the
+    same seeded schedule."""
+
+    seed: int = 0
+    rules: List[str] = dataclasses.field(default_factory=list)
+
+    KEYS = ("seed", "rules")
+    FIELD_DOCS = {
+        "seed": "seed for the plan's per-rule RNG streams — the same "
+                "seed reproduces the same fault schedule on every run "
+                "and every backend (default 0)",
+        "rules": "non-empty list of `site:action[@k=v,...]` rule strings "
+                 "or `{site, action, p, times, after, delay_s, key}` "
+                 "mappings (see `docs/architecture.md` for the site and "
+                 "action tables); a bare string section is shorthand for "
+                 "the whole `REPRO_FAULTS` spec string",
+    }
+
+    @classmethod
+    def from_raw(cls, raw: Any, where: str = "faults"
+                 ) -> Optional["FaultsSpec"]:
+        from repro.faults import FaultPlan
+
+        if raw is None:
+            return None
+        try:
+            if isinstance(raw, str):
+                plan = FaultPlan.from_string(raw)
+            else:
+                plan = FaultPlan.from_spec(_require_mapping(raw, where))
+        except ValueError as e:
+            raise ExperimentError(f"{where}: {e}") from None
+        if not plan.rules:
+            raise ExperimentError(
+                f"{where}: needs at least one rule (omit the section to "
+                f"run without injection)")
+        return cls(seed=plan.seed, rules=[r.to_string() for r in plan.rules])
+
+    def plan(self):
+        """The validated, installable :class:`repro.faults.FaultPlan`."""
+        from repro.faults import FaultPlan
+
+        return FaultPlan.from_spec({"seed": self.seed, "rules": list(self.rules)})
+
+    def to_dict(self) -> Dict[str, Any]:
+        d: Dict[str, Any] = {"rules": list(self.rules)}
+        if self.seed:
+            d["seed"] = self.seed
+        return d
+
+
 TOP_LEVEL_KEYS = (
     "name", "search_space", "sampler", "executor", "schedule", "criteria",
     "fidelity", "kernel_tuning", "target", "cache", "persistence", "budget",
-    "pruner", "scalarize", "report_dir",
+    "pruner", "scalarize", "report_dir", "faults",
 )
 
 # descriptions for the top-level experiment document, rendered into
@@ -733,6 +790,9 @@ TOP_LEVEL_DOCS = {
                  "`false`: multi-objective (Pareto) — rejects "
                  "soft constraints, which only exist in scalarized mode",
     "report_dir": "directory for the report artifact (default `results`)",
+    "faults": "optional deterministic fault injection (see table below): "
+              "a seeded chaos schedule installed for the run and "
+              "inherited by spawned process workers via `REPRO_FAULTS`",
 }
 
 
@@ -781,6 +841,7 @@ class ExperimentSpec:
     pruner: Optional[PrunerSpec] = None
     fidelity: Optional[FidelitySpec] = None
     kernel_tuning: Optional[KernelTuningSpec] = None
+    faults: Optional[FaultsSpec] = None
     scalarize: bool = True
     report_dir: str = "results"
 
@@ -865,6 +926,7 @@ class ExperimentSpec:
             pruner=PrunerSpec.from_raw(raw.get("pruner")),
             fidelity=fidelity,
             kernel_tuning=KernelTuningSpec.from_raw(raw.get("kernel_tuning")),
+            faults=FaultsSpec.from_raw(raw.get("faults")),
             scalarize=scalarize,
             report_dir=str(raw.get("report_dir", "results")),
         )
@@ -905,6 +967,8 @@ class ExperimentSpec:
             d["fidelity"] = self.fidelity.to_dict()
         if self.kernel_tuning is not None:
             d["kernel_tuning"] = self.kernel_tuning.to_dict()
+        if self.faults is not None:
+            d["faults"] = self.faults.to_dict()
         return d
 
     # -- derived views ---------------------------------------------------------

@@ -399,21 +399,43 @@ class Explorer:
         self._objective = objective = SpecObjective(
             spec.to_dict(), run_token=uuid.uuid4().hex)
 
+        # a faults: section arms the chaos plan for exactly this run —
+        # installed in-process for serial/threaded execution, exported
+        # through REPRO_FAULTS so spawned process workers inherit the
+        # same seeded schedule; both undone afterwards
+        restore_env = None
+        if spec.faults is not None:
+            from repro import faults as _faults
+
+            restore_env = os.environ.get("REPRO_FAULTS")
+            plan = _faults.install(spec.faults.plan())
+            os.environ["REPRO_FAULTS"] = plan.to_string()
+
         # persistence resume: already-stored trials count against the budget
         remaining = spec.budget.n_trials - len(study.trials)
         t0 = time.perf_counter()
-        if remaining > 0:
-            # budget.timeout_s is enforced inside the scheduler —
-            # per-submission under the sliding window, per-batch under the
-            # batch scheduler — so a timeout can't overshoot by a whole
-            # batch of slow trials
-            study.optimize(objective, remaining,
-                           n_workers=spec.executor.n_workers,
-                           timeout_s=spec.budget.timeout_s,
-                           screen=(objective.screen_cohort
-                                   if spec.fidelity is not None else None),
-                           cohort=(spec.fidelity.generation
-                                   if spec.fidelity is not None else None))
+        try:
+            if remaining > 0:
+                # budget.timeout_s is enforced inside the scheduler —
+                # per-submission under the sliding window, per-batch under the
+                # batch scheduler — so a timeout can't overshoot by a whole
+                # batch of slow trials
+                study.optimize(objective, remaining,
+                               n_workers=spec.executor.n_workers,
+                               timeout_s=spec.budget.timeout_s,
+                               screen=(objective.screen_cohort
+                                       if spec.fidelity is not None else None),
+                               cohort=(spec.fidelity.generation
+                                       if spec.fidelity is not None else None))
+        finally:
+            if spec.faults is not None:
+                from repro import faults as _faults
+
+                _faults.uninstall()
+                if restore_env is None:
+                    os.environ.pop("REPRO_FAULTS", None)
+                else:
+                    os.environ["REPRO_FAULTS"] = restore_env
         wall_clock = time.perf_counter() - t0
 
         report = self._build_report(wall_clock)

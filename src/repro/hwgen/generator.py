@@ -26,6 +26,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import numpy as np
 
+from repro import faults
 from repro.compat import cost_analysis_dict
 from repro.envvars import read_env
 from repro.hwgen.hlo_analysis import parse_collectives, total_collective_bytes
@@ -159,6 +160,9 @@ class XLAGenerator:
         global _generate_count
         with _generate_count_lock:
             _generate_count += 1
+        # chaos seam: a `raise` here models an XLA/toolchain crash on one
+        # candidate, a `delay` models a pathological compile
+        faults.fault_point("compile", key=self.target.name)
         mesh = self._mesh()
         # Admission control around the whole generate pipeline: tracing is
         # GIL-bound Python, XLA compilation oversubscribes its internal

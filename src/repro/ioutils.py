@@ -67,11 +67,25 @@ def locked_append(path: str, line: str) -> None:
     """Append one record to ``path`` durably and atomically w.r.t. other
     processes: an OS advisory lock around a single ``write`` + flush +
     fsync, so concurrent appenders sharing the file never tear records.
-    Serialization against sibling *threads* is the caller's job."""
-    with open(path, "a") as f:
+    Serialization against sibling *threads* is the caller's job.
+
+    Crash hardening: a writer killed mid-append leaves a torn tail with
+    no trailing newline; appending straight onto it would concatenate
+    the new record into the garbage and lose *both*.  Under the lock we
+    check the last byte and seal a torn tail with a newline first, so
+    corruption stays confined to the one record that was actually torn.
+    """
+    data = line.encode("utf-8")
+    with open(path, "ab+") as f:
         how = lock_file(f, path)
         try:
-            f.write(line)
+            f.seek(0, os.SEEK_END)
+            end = f.tell()
+            if end > 0:
+                f.seek(end - 1)
+                if f.read(1) != b"\n":
+                    data = b"\n" + data
+            f.write(data)
             f.flush()
             os.fsync(f.fileno())
         finally:

@@ -37,14 +37,21 @@ from __future__ import annotations
 
 import dataclasses
 import multiprocessing
+import os
 import pickle
 import queue as queue_module
+import shutil
+import tempfile
 import threading
 import traceback
 import uuid
+import warnings
 from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
+from concurrent.futures.process import BrokenProcessPool
 from typing import Any, Callable, Dict, Hashable, List, Optional, Tuple, Union
 
+from repro import faults
+from repro.envvars import read_env
 from repro.explorer.registry import EXECUTORS
 from repro.search.detached import (
     DetachedSampler,
@@ -55,6 +62,11 @@ from repro.search.study import evaluate_trial
 from repro.search.trial import Distribution, Trial, TrialState
 
 Outcome = Union[Tuple[Optional[object], TrialState], BaseException]
+
+#: Returned by a completion thunk when the trial was resubmitted (worker
+#: death below the quarantine threshold) — ``next_completed`` keeps
+#: waiting instead of surfacing it.
+RESUBMITTED = object()
 
 
 # ---------------------------------------------------------------------------
@@ -112,13 +124,24 @@ def _portable_exception(e: BaseException) -> BaseException:
 def run_detached_trial(objective: Callable, number: int, plan: DetachedSampler,
                        catch: Tuple, pruner: Optional[PrunerContext] = None,
                        report_queue: Any = None,
-                       params: Optional[Dict[str, Any]] = None) -> WorkerResult:
+                       params: Optional[Dict[str, Any]] = None,
+                       start_dir: Optional[str] = None) -> WorkerResult:
     """Worker entry point: evaluate the objective on a detached trial.
     Uncaught exceptions are *returned* (not raised) so the sampled params
     and attrs collected before the failure still reach the parent.
     ``params`` pre-seeds suggestions already sampled in the parent (the
     cascade's in-parent screening), so the worker evaluates exactly the
-    configuration that was screened."""
+    configuration that was screened.  ``start_dir`` is the process
+    backend's blame channel: a marker file written *before* the objective
+    runs survives a SIGKILL, so on pool breakage the parent knows which
+    trials were actually executing (and may be poison) versus merely
+    queued (innocent, resubmitted without a strike)."""
+    if start_dir is not None:
+        try:
+            with open(os.path.join(start_dir, str(number)), "w"):
+                pass
+        except OSError:
+            pass  # blame degrades to "unknown": the trial is never struck
     trial = DetachedTrial(number, plan, pruner=pruner, report_queue=report_queue,
                           params=params)
     if pruner is not None:
@@ -128,6 +151,9 @@ def run_detached_trial(objective: Callable, number: int, plan: DetachedSampler,
         pruner.apply()
     error: Optional[BaseException] = None
     try:
+        # the worker.trial fault site: `kill` here SIGKILLs this worker
+        # process/daemon mid-trial, exactly like an OOM kill would
+        faults.fault_point("worker.trial", key=number)
         values, state = evaluate_trial(objective, trial, catch)
     except BaseException as e:  # uncaught objective error
         trial.set_user_attr("error", repr(e))
@@ -354,6 +380,7 @@ class BaseExecutor:
         return st
 
     def _track(self, trial: Trial, future: Any = None) -> None:
+        faults.fault_point("executor.submit", key=trial.number)
         self._stream().pending[trial.number] = (trial, future)
 
     def _complete(self, trial: Trial, thunk: Callable[[], Outcome]) -> None:
@@ -402,7 +429,13 @@ class BaseExecutor:
             if entry is None or entry[0] is not trial:
                 continue
             st.pending.pop(trial.number)
-            return trial, thunk()
+            outcome = thunk()
+            if outcome is RESUBMITTED:
+                # a worker death below the quarantine threshold: the
+                # thunk re-submitted the trial (it is pending again), so
+                # keep waiting for a real completion
+                continue
+            return trial, outcome
 
     def cancel_pending(self) -> List[Trial]:
         """Cancel submissions whose evaluation has not started and return
@@ -487,12 +520,22 @@ class ProcessExecutor(BaseExecutor):
 
     name = "process"
 
-    def __init__(self, mp_context: str = "spawn"):
+    def __init__(self, mp_context: str = "spawn",
+                 quarantine_after: Optional[int] = None):
         self.mp_context = mp_context
+        # worker deaths one trial may be implicated in before it is told
+        # FAIL (user_attrs["quarantined"]) instead of resubmitted — a
+        # poison trial that OOM-kills every process it lands on must not
+        # break the pool for its siblings forever
+        self.quarantine_after = (
+            quarantine_after if quarantine_after is not None
+            else read_env("REPRO_QUARANTINE_DEATHS", 2))
         self._pool: Optional[ProcessPoolExecutor] = None
         self._n_workers = 0
         self._manager = None          # multiprocessing.Manager for the report channel
         self._report_queue = None     # proxy queue workers stream reports into
+        self._deaths: Dict[int, int] = {}  # trial number -> implicated deaths
+        self._start_dir: Optional[str] = None  # blame markers (see run_detached_trial)
         # append-only pruner-history delta log (see _pruner_context);
         # this backend touches it only from the scheduler thread (submit
         # + next_completed's collect thunks), acks keyed by worker pid
@@ -501,9 +544,26 @@ class ProcessExecutor(BaseExecutor):
     def start(self, n_workers):
         if self._pool is not None:
             return
-        ctx = multiprocessing.get_context(self.mp_context)
-        self._pool = ProcessPoolExecutor(max_workers=n_workers, mp_context=ctx)
+        self._pool = self._make_pool(n_workers)
         self._n_workers = n_workers
+        if self._start_dir is None:
+            self._start_dir = tempfile.mkdtemp(prefix="repro-trial-blame-")
+
+    def _make_pool(self, n_workers: int) -> ProcessPoolExecutor:
+        ctx = multiprocessing.get_context(self.mp_context)
+        return ProcessPoolExecutor(max_workers=n_workers, mp_context=ctx)
+
+    def _restart_pool(self, broken: ProcessPoolExecutor) -> None:
+        """Replace a broken pool exactly once: the first in-flight future
+        to observe the breakage swaps it, siblings (whose ``broken`` ref
+        no longer matches) reuse the replacement."""
+        if self._pool is not broken:
+            return
+        try:
+            broken.shutdown(wait=False)
+        except Exception:
+            pass
+        self._pool = self._make_pool(self._n_workers)
 
     def shutdown(self):
         if self._pool is not None:
@@ -513,6 +573,10 @@ class ProcessExecutor(BaseExecutor):
             self._manager.shutdown()
             self._manager = None
             self._report_queue = None
+        if self._start_dir is not None:
+            shutil.rmtree(self._start_dir, ignore_errors=True)
+            self._start_dir = None
+        self._deaths.clear()
         # pool workers died with their _DELTA_HISTORY; a restarted
         # executor must open a fresh context rather than resume this log
         self._delta.clear()
@@ -564,16 +628,64 @@ class ProcessExecutor(BaseExecutor):
     def _merge(self, study, trial: Trial, res: WorkerResult) -> None:
         merge_worker_result(study, trial, res)
 
-    def _collect(self, study, trial: Trial, future) -> Outcome:
+    def _blame_marker(self, number: int) -> str:
+        return os.path.join(self._start_dir or "", str(number))
+
+    def _worker_death(self, study, objective, trial: Trial, catch,
+                      pool: ProcessPoolExecutor, exc: BaseException) -> Outcome:
+        """One in-flight future observed pool breakage (a worker process
+        was SIGKILLed / OOM-killed / segfaulted).  Restart the pool, then
+        either resubmit the trial or — if its blame marker shows it was
+        actually *executing* across ``quarantine_after`` deaths —
+        quarantine it so a poison trial cannot break the pool forever.
+        Trials that were only queued when the pool broke carry no marker
+        and are resubmitted without a strike."""
+        self._restart_pool(pool)
+        marker = self._blame_marker(trial.number)
+        implicated = self._start_dir is not None and os.path.exists(marker)
+        if implicated:
+            self._deaths[trial.number] = deaths = self._deaths.get(trial.number, 0) + 1
+            try:
+                os.unlink(marker)  # re-arm the marker for the resubmission
+            except OSError:
+                pass
+            if deaths >= self.quarantine_after:
+                warnings.warn(
+                    f"trial {trial.number} implicated in {deaths} worker "
+                    f"death(s); quarantining it instead of resubmitting",
+                    RuntimeWarning, stacklevel=2)
+                self._delta.finalize(trial.number, TrialState.FAIL, None, {})
+                trial.set_user_attr("quarantined", {
+                    "deaths": deaths, "error": repr(exc)})
+                trial.set_user_attr("error", repr(exc))
+                return (None, TrialState.FAIL)
+        try:
+            self.submit(study, objective, trial, catch)
+        except BrokenProcessPool as e:  # replacement pool died instantly
+            self._delta.finalize(trial.number, TrialState.FAIL, None, {})
+            trial.set_user_attr("error", repr(e))
+            return e
+        return RESUBMITTED
+
+    def _collect(self, study, objective, trial: Trial, catch,
+                 pool: ProcessPoolExecutor, future) -> Outcome:
         try:
             res = future.result()
-        except BaseException as e:  # payload/result failed to pickle, worker died
+        except BrokenProcessPool as e:
+            return self._worker_death(study, objective, trial, catch, pool, e)
+        except BaseException as e:  # payload/result failed to pickle
             # retract any reports the dead worker streamed: no merge
             # happened, so later pruner snapshots must not count its
             # partial values
             self._delta.finalize(trial.number, TrialState.FAIL, None, {})
             trial.set_user_attr("error", repr(e))
             return e
+        if self._start_dir is not None:
+            try:
+                os.unlink(self._blame_marker(trial.number))
+            except OSError:
+                pass
+        self._deaths.pop(trial.number, None)
         self._merge(study, trial, res)
         if res.pruner_ack is not None:
             cid, pid, applied = res.pruner_ack
@@ -587,14 +699,16 @@ class ProcessExecutor(BaseExecutor):
         with study._lock:
             plan = study.sampler.detached(study, trial)
             pruner_ctx = self._pruner_context(study)
-        future = self._pool.submit(
+        pool = self._pool
+        future = pool.submit(
             run_detached_trial, objective, trial.number, plan, catch,
             pruner=pruner_ctx, report_queue=self._report_queue,
-            params=dict(trial.params) or None)
+            params=dict(trial.params) or None, start_dir=self._start_dir)
         self._track(trial, future)
         future.add_done_callback(
             lambda f, trial=trial: self._complete(
-                trial, lambda: self._collect(study, trial, f)))
+                trial, lambda: self._collect(study, objective, trial, catch,
+                                             pool, f)))
 
 
 def make_executor(backend: Union[str, BaseExecutor]) -> BaseExecutor:

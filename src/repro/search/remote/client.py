@@ -29,11 +29,12 @@ from __future__ import annotations
 
 import collections
 import pickle
+import random
 import threading
 import time
 import uuid
 import warnings
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple
 
 from repro.envvars import read_env
 from repro.search.remote import transport
@@ -50,8 +51,25 @@ DEFAULT_RETRIES = 2
 
 _monotonic = time.monotonic  # stubable in tests
 
+# reconnect backoff for rejoin-enabled pools: exponential from the base
+# up to the cap, each sleep jittered so a restarted pool's clients don't
+# thundering-herd one daemon socket
+REJOIN_BACKOFF_BASE_S = 0.2
+REJOIN_BACKOFF_CAP_S = 5.0
+
 # (context_id, base, deltas) — what a pruner-refresh push ships
 RefreshTail = Tuple[str, int, List[Tuple]]
+
+
+class PoisonTrialError(RuntimeError):
+    """A task was implicated in ``quarantine_after`` worker deaths: the
+    evidence says the task itself kills workers (OOM, segfault in a
+    compile), so resubmitting it anywhere would drain the pool.  The
+    executor converts this into a quarantined FAIL for the trial."""
+
+    def __init__(self, message: str, deaths: int):
+        super().__init__(message)
+        self.deaths = deaths
 
 
 class RemoteTask:
@@ -66,6 +84,7 @@ class RemoteTask:
         self.make_payload = make_payload
         self.on_done = on_done
         self.attempts = 0
+        self.deaths = 0  # workers lost while running this task
         self.task_id: Optional[str] = None  # fresh per attempt
         self.worker: Optional["_Worker"] = None
         self.done = False
@@ -108,6 +127,8 @@ class RemoteClient:
                  task_timeout_s: Optional[float] = None,
                  connect_timeout_s: float = 5.0,
                  refresh_min_interval_s: float = 0.25,
+                 quarantine_after: Optional[int] = None,
+                 rejoin: bool = False,
                  on_report: Optional[Callable] = None,
                  on_refresh_ack: Optional[Callable] = None,
                  on_worker_lost: Optional[Callable] = None):
@@ -122,6 +143,12 @@ class RemoteClient:
         self.task_timeout_s = task_timeout_s
         self.connect_timeout_s = float(connect_timeout_s)
         self.refresh_min_interval_s = float(refresh_min_interval_s)
+        # None disables quarantine at this layer: retry exhaustion stays
+        # the client's only give-up path (the executor layers quarantine
+        # on top with its own default)
+        self.quarantine_after = (None if quarantine_after is None
+                                 else max(1, int(quarantine_after)))
+        self.rejoin = bool(rejoin)
         self.on_report = on_report
         self.on_refresh_ack = on_refresh_ack
         self.on_worker_lost = on_worker_lost
@@ -129,6 +156,8 @@ class RemoteClient:
         self._workers: List[_Worker] = []
         self._queue: "collections.deque[RemoteTask]" = collections.deque()
         self._threads: List[threading.Thread] = []
+        self._rejoining: Set[str] = set()  # addrs with a redial thread up
+        self._wake = threading.Event()     # set at close: aborts backoff sleeps
         self._closing = False
 
     # -- pool lifecycle --------------------------------------------------------
@@ -138,27 +167,74 @@ class RemoteClient:
         made it into the pool.  Failures warn and are skipped — zero
         live workers is the *caller's* degradation decision."""
         for addr in self.addrs:
-            try:
-                conn = transport.connect(addr, timeout=self.connect_timeout_s)
-            except OSError as e:
-                warnings.warn(f"remote worker {addr} unreachable ({e}); skipping",
-                              RuntimeWarning, stacklevel=2)
-                continue
-            try:
-                hello = transport.client_hello(conn, timeout=self.connect_timeout_s)
-            except (HandshakeError, TransportError) as e:
-                conn.close()
-                warnings.warn(f"remote worker {addr} rejected the handshake: {e}",
-                              RuntimeWarning, stacklevel=2)
-                continue
-            worker = _Worker(addr, conn, str(hello.get("worker", addr)))
-            with self._lock:
-                self._workers.append(worker)
-            t = threading.Thread(target=self._recv_loop, args=(worker,),
-                                 daemon=True, name=f"repro-remote-recv-{addr}")
-            t.start()
-            self._threads.append(t)
+            self._connect_addr(addr)
         return self.live_workers()
+
+    def _connect_addr(self, addr: str, quiet: bool = False) -> Optional["_Worker"]:
+        """Connect + handshake one address and start its receiver thread.
+        ``quiet`` suppresses the per-failure warnings (the rejoin loop
+        retries for minutes and must not spam)."""
+        try:
+            conn = transport.connect(addr, timeout=self.connect_timeout_s)
+        except OSError as e:
+            if not quiet:
+                warnings.warn(f"remote worker {addr} unreachable ({e}); skipping",
+                              RuntimeWarning, stacklevel=3)
+            return None
+        try:
+            hello = transport.client_hello(conn, timeout=self.connect_timeout_s)
+        except (HandshakeError, TransportError) as e:
+            conn.close()
+            if not quiet:
+                warnings.warn(f"remote worker {addr} rejected the handshake: {e}",
+                              RuntimeWarning, stacklevel=3)
+            return None
+        worker = _Worker(addr, conn, str(hello.get("worker", addr)))
+        with self._lock:
+            if self._closing:
+                conn.close()
+                return None
+            self._workers.append(worker)
+        t = threading.Thread(target=self._recv_loop, args=(worker,),
+                             daemon=True, name=f"repro-remote-recv-{addr}")
+        t.start()
+        self._threads.append(t)
+        return worker
+
+    # -- rejoin (dynamic pool membership) --------------------------------------
+
+    def _start_rejoin(self, addr: str) -> None:
+        """Begin redialing a lost worker's address on a background
+        thread, with exponential backoff + jitter; on success the daemon
+        re-enters the pool and queued work starts flowing to it."""
+        with self._lock:
+            if self._closing or addr in self._rejoining:
+                return
+            self._rejoining.add(addr)
+        t = threading.Thread(target=self._rejoin_loop, args=(addr,),
+                             daemon=True, name=f"repro-remote-rejoin-{addr}")
+        t.start()
+        self._threads.append(t)
+
+    def _rejoin_loop(self, addr: str) -> None:
+        delay = REJOIN_BACKOFF_BASE_S
+        try:
+            while not self._closing:
+                # jittered sleep: simultaneous rejoiners (a whole pool
+                # restarting) spread out instead of herding one socket
+                self._wake.wait(delay * random.uniform(0.5, 1.5))
+                if self._closing:
+                    return
+                worker = self._connect_addr(addr, quiet=True)
+                if worker is not None:
+                    warnings.warn(f"remote worker {addr} rejoined the pool",
+                                  RuntimeWarning, stacklevel=2)
+                    self._pump()
+                    return
+                delay = min(delay * 2.0, REJOIN_BACKOFF_CAP_S)
+        finally:
+            with self._lock:
+                self._rejoining.discard(addr)
 
     def live_workers(self) -> List[str]:
         with self._lock:
@@ -166,6 +242,7 @@ class RemoteClient:
 
     def close(self) -> None:
         self._closing = True
+        self._wake.set()  # abort rejoin backoff sleeps
         with self._lock:
             workers = list(self._workers)
             self._workers = []
@@ -193,7 +270,11 @@ class RemoteClient:
         task = RemoteTask(key, make_payload, on_done)
         task._client = self
         with self._lock:
-            if not any(w.alive for w in self._workers):
+            # a rejoin-enabled pool that is mid-reconnect holds the task
+            # (the rejoin loop pumps the queue when a daemon redials);
+            # only a pool with no way back fails inline
+            healing = self.rejoin and bool(self._rejoining) and not self._closing
+            if not any(w.alive for w in self._workers) and not healing:
                 task.done = True
                 dead = RuntimeError(
                     "no live remote workers (all lost or never connected)")
@@ -300,6 +381,12 @@ class RemoteClient:
             elif msg.kind in ("result", "error"):
                 self._finish(w, msg)
                 self._pump()
+            elif msg.kind == "shutdown":
+                # graceful daemon exit (SIGTERM): resubmit its in-flight
+                # work *now* instead of waiting out the heartbeat timeout
+                self._worker_lost(w, "worker announced shutdown")
+                self._pump()
+                return
             # "ack" and unknown kinds: liveness signal only
 
     def _finish(self, w: _Worker, msg) -> None:
@@ -337,20 +424,36 @@ class RemoteClient:
             any_alive = any(x.alive for x in self._workers)
             if task is not None and not task.done:
                 task.worker = None
-                if not any_alive:
+                task.deaths += 1
+                if (self.quarantine_after is not None
+                        and task.deaths >= self.quarantine_after):
+                    # the common factor across these deaths is the task:
+                    # stop feeding it workers.  Checked before pool state
+                    # on purpose — a poison task that just took down the
+                    # last worker is still a poison task, not a pool
+                    # outage
                     task.done = True
-                    to_fail.append((task, RuntimeError(
-                        f"worker {w.addr} lost ({reason}) and no live workers "
-                        f"remain to resubmit to")))
+                    to_fail.append((task, PoisonTrialError(
+                        f"task implicated in {task.deaths} worker death(s) "
+                        f"(last: {w.addr}, {reason}); quarantined",
+                        deaths=task.deaths)))
                 elif task.attempts > self.retries:
                     task.done = True
                     to_fail.append((task, RuntimeError(
                         f"task failed after {task.attempts} attempts; last "
                         f"worker {w.addr} lost ({reason})")))
+                elif not any_alive and not self.rejoin:
+                    task.done = True
+                    to_fail.append((task, RuntimeError(
+                        f"worker {w.addr} lost ({reason}) and no live workers "
+                        f"remain to resubmit to")))
                 else:
-                    self._queue.appendleft(task)  # resubmit on a sibling
-            if not any_alive:
-                # total pool loss: every queued task can only fail
+                    # a sibling is alive, or rejoin will heal the pool
+                    self._queue.appendleft(task)
+            if not any_alive and not self.rejoin:
+                # total pool loss with no way back: every queued task can
+                # only fail (rejoin-enabled pools hold the queue instead
+                # and drain it when a daemon redials)
                 while self._queue:
                     queued = self._queue.popleft()
                     if queued.done:
@@ -369,6 +472,8 @@ class RemoteClient:
             self.on_worker_lost(w.addr, reason)
         for task, err in to_fail:
             task.on_done(task.key, None, err, None)
+        if self.rejoin and not self._closing:
+            self._start_rejoin(w.addr)
 
     # -- mid-trial pruner refresh ---------------------------------------------
 

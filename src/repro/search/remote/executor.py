@@ -49,7 +49,7 @@ from repro.search.executors import (
     make_executor,
     merge_worker_result,
 )
-from repro.search.remote.client import RemoteClient
+from repro.search.remote.client import PoisonTrialError, RemoteClient
 from repro.search.trial import Trial, TrialState
 
 WORKERS_ENV = "REPRO_REMOTE_WORKERS"
@@ -64,13 +64,21 @@ class RemoteExecutor(BaseExecutor):
                  heartbeat_timeout_s: Optional[float] = None,
                  task_timeout_s: Optional[float] = None,
                  connect_timeout_s: float = 5.0,
-                 fallback: str = "process"):
+                 fallback: str = "process",
+                 quarantine_after: Optional[int] = None,
+                 rejoin: bool = True):
         self.workers = [str(w) for w in workers] if workers else None
         self.retries = retries
         self.heartbeat_timeout_s = heartbeat_timeout_s
         self.task_timeout_s = task_timeout_s
         self.connect_timeout_s = connect_timeout_s
         self.fallback = fallback
+        # a trial implicated in this many worker deaths is a poison
+        # trial: quarantined as FAIL instead of burning the whole pool
+        self.quarantine_after = (quarantine_after
+                                 if quarantine_after is not None
+                                 else read_env("REPRO_QUARANTINE_DEATHS", 2))
+        self.rejoin = rejoin
         self._client: Optional[RemoteClient] = None
         self._delegate: Optional[BaseExecutor] = None
         self._delta = PrunerDeltaLog()
@@ -92,6 +100,8 @@ class RemoteExecutor(BaseExecutor):
             heartbeat_timeout_s=self.heartbeat_timeout_s,
             task_timeout_s=self.task_timeout_s,
             connect_timeout_s=self.connect_timeout_s,
+            quarantine_after=self.quarantine_after,
+            rejoin=self.rejoin,
             on_report=self._on_report,
             on_refresh_ack=self._on_refresh_ack,
             on_worker_lost=self._on_worker_lost)
@@ -192,6 +202,17 @@ class RemoteExecutor(BaseExecutor):
     # -- completion + delta-log bookkeeping ------------------------------------
 
     def _collect(self, study, trial: Trial, value, error, worker_addr) -> Outcome:
+        if isinstance(error, PoisonTrialError):
+            # the trial itself keeps killing daemons — quarantine it as a
+            # FAIL with forensics, and let its siblings finish the study
+            self._delta.finalize(trial.number, TrialState.FAIL, None, {})
+            warnings.warn(
+                f"trial {trial.number} implicated in {error.deaths} worker "
+                f"death(s); quarantining", RuntimeWarning, stacklevel=2)
+            trial.set_user_attr(
+                "quarantined", {"deaths": error.deaths, "error": repr(error)})
+            trial.set_user_attr("error", repr(error))
+            return (None, TrialState.FAIL)
         if error is not None or not isinstance(value, WorkerResult):
             # worker lost beyond retries, undecodable result, or payload
             # build failure: retract any reports the attempts streamed so

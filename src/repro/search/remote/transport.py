@@ -44,7 +44,10 @@ import json
 import socket
 import struct
 import threading
+import zlib
 from typing import Any, Dict, Optional, Tuple
+
+from repro import faults
 
 PROTOCOL_VERSION = 1
 
@@ -103,9 +106,24 @@ class Connection:
 
     def send(self, kind: str, meta: Optional[Dict[str, Any]] = None,
              payload: bytes = b"") -> None:
-        """Write one frame atomically w.r.t. sibling sender threads."""
-        header = json.dumps({"kind": kind, "meta": meta or {}},
-                            separators=(",", ":")).encode("utf-8")
+        """Write one frame atomically w.r.t. sibling sender threads.  The
+        header carries a CRC32 of the payload so a mangled body is
+        detected at recv as a :class:`TransportError` (worker-lost path)
+        instead of surfacing as an unpickling error deep in a worker."""
+        envelope: Dict[str, Any] = {"kind": kind, "meta": meta or {}}
+        if payload:
+            envelope["crc"] = zlib.crc32(payload)
+        try:
+            # fault injection models the wire, not the sender: the CRC is
+            # computed over the intact payload, so injected corruption is
+            # caught by the receiver's checksum
+            payload = faults.fault_point("transport.send", payload)
+        except faults.InjectedFault as e:
+            self._closed = True
+            raise TransportError(f"send failed: {e}") from e
+        if payload is faults.DROP:
+            return  # injected frame loss: the bytes never hit the socket
+        header = json.dumps(envelope, separators=(",", ":")).encode("utf-8")
         frame = _U32.pack(len(header)) + header + _U32.pack(len(payload)) + payload
         with self._send_lock:
             if self._closed:
@@ -135,6 +153,13 @@ class Connection:
         frame *started* — safe to call again.  Once a frame begins, the
         remainder is read under :data:`FRAME_REMAINDER_TIMEOUT_S` so a
         timeout can never strand the stream mid-frame."""
+        while True:
+            msg = self._recv_one(timeout)
+            if msg is not None and msg.payload is faults.DROP:
+                continue  # injected inbound frame loss: read the next one
+            return msg
+
+    def _recv_one(self, timeout: Optional[float]) -> Optional[Message]:
         try:
             self._sock.settimeout(timeout)
             first = self._sock.recv(1)
@@ -162,6 +187,16 @@ class Connection:
         if payload_len > MAX_PART_BYTES:
             raise TransportError(f"implausible payload length {payload_len}")
         payload = self._recv_exact(payload_len, wedged) if payload_len else b""
+        try:
+            payload = faults.fault_point("transport.recv", payload)
+        except faults.InjectedFault as e:
+            raise TransportError(f"recv failed: {e}") from e
+        if payload is faults.DROP:
+            return Message(str(kind), meta, payload)  # recv() skips it
+        crc = header.get("crc")
+        if crc is not None and crc != zlib.crc32(payload):
+            raise TransportError(
+                f"corrupt frame payload: checksum mismatch on {kind!r}")
         return Message(str(kind), meta, payload)
 
     def close(self) -> None:

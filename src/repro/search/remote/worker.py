@@ -40,6 +40,8 @@ from __future__ import annotations
 
 import argparse
 import pickle
+import random
+import signal
 import socket
 import threading
 import uuid
@@ -136,6 +138,19 @@ class WorkerServer:
             self.start()
         self._stopping.wait()
 
+    def announce_shutdown(self) -> None:
+        """Send a ``shutdown`` frame on every live connection so clients
+        resubmit this daemon's in-flight work *immediately* instead of
+        waiting out the heartbeat timeout.  Best-effort: a connection
+        that cannot take the frame will be noticed the slow way."""
+        with self._lock:
+            conns = list(self._conns)
+        for conn in conns:
+            try:
+                conn.send("shutdown", {"worker": self.worker_id})
+            except TransportError:
+                pass
+
     def stop(self) -> None:
         self._stopping.set()
         if self._listener is not None:
@@ -171,7 +186,10 @@ class WorkerServer:
 
     def _heartbeat_loop(self, conn: Connection) -> None:
         while not self._stopping.is_set() and not conn.closed:
-            if self._stopping.wait(self.heartbeat_s):
+            # ±20% jitter: a pool of daemons started by one job script
+            # would otherwise heartbeat in lockstep and burst the
+            # client's receive loops at the same instant
+            if self._stopping.wait(self.heartbeat_s * random.uniform(0.8, 1.2)):
                 return
             try:
                 conn.send("heartbeat", {"worker": self.worker_id,
@@ -308,10 +326,24 @@ def main(argv: Optional[list] = None) -> int:
     host, port = server.start()
     # the one line launchers parse: the bound address (meaningful with --port 0)
     print(f"listening on {host}:{port}", flush=True)
+
+    def _graceful(signum, frame):  # noqa: ARG001 — signal handler signature
+        # Announce before tearing down: the client resubmits this
+        # daemon's in-flight trials immediately instead of waiting out
+        # the heartbeat timeout.
+        print(f"received {signal.Signals(signum).name}, shutting down",
+              flush=True)
+        server.announce_shutdown()
+        server.stop()
+
+    signal.signal(signal.SIGTERM, _graceful)
+    signal.signal(signal.SIGINT, _graceful)
     try:
         server.serve_forever()
     except KeyboardInterrupt:
-        pass
+        # race: SIGINT delivered between handler install and the
+        # interruptible wait inside serve_forever
+        server.announce_shutdown()
     finally:
         server.stop()
     return 0

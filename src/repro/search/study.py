@@ -12,9 +12,11 @@ from __future__ import annotations
 import json
 import os
 import threading
+import warnings
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-from repro.ioutils import locked_append
+from repro import faults
+from repro.ioutils import lock_file, locked_append, unlock_file
 from repro.search.samplers import BaseSampler, RandomSampler, pareto_front
 from repro.search.trial import Distribution, Trial, TrialState
 
@@ -70,25 +72,58 @@ class Study:
         self.trials: List[Trial] = []
         self.distribution_registry: Dict[str, Distribution] = {}
         self._lock = threading.RLock()  # guards trials + registry + storage
+        self._repair_to: Optional[int] = None  # byte offset of torn tail, if any
         if storage and os.path.exists(storage):
             self._load(storage)
 
     # -- persistence ----------------------------------------------------------
 
     def _load(self, path: str) -> None:
-        with open(path) as f:
-            for line in f:
-                line = line.strip()
-                if not line:
-                    continue
+        # A crash mid-append (power loss, SIGKILL inside locked_append)
+        # leaves a torn final record: truncated JSON, usually without its
+        # newline.  That must never make the study unresumable — parse
+        # what's intact, warn about the rest, and remember the byte
+        # offset of the tail so the next persist truncates it away
+        # (otherwise the append would concatenate onto the torn bytes
+        # and corrupt the *next* record too).
+        with open(path, "rb") as f:
+            data = f.read()
+        pos = 0
+        intact_end = 0
+        bad = 0
+        for chunk in data.splitlines(keepends=True):
+            start, pos = pos, pos + len(chunk)
+            line = chunk.strip()
+            if not line:
+                intact_end = pos
+                continue
+            try:
+                if not chunk.endswith(b"\n"):
+                    raise ValueError("no trailing newline")
                 rec = json.loads(line)
-                if rec.get("kind") == "trial":
-                    t = Trial.from_dict(rec["trial"], self)
-                    existing = {x.number: i for i, x in enumerate(self.trials)}
-                    if t.number in existing:
-                        self.trials[existing[t.number]] = t
-                    else:
-                        self.trials.append(t)
+                trial_raw = rec["trial"] if rec.get("kind") == "trial" else None
+                t = Trial.from_dict(trial_raw, self) if trial_raw else None
+            except (ValueError, KeyError, TypeError):
+                bad += 1
+                continue
+            intact_end = pos
+            if t is not None:
+                existing = {x.number: i for i, x in enumerate(self.trials)}
+                if t.number in existing:
+                    self.trials[existing[t.number]] = t
+                else:
+                    self.trials.append(t)
+        if bad:
+            torn_tail = intact_end < len(data)
+            warnings.warn(
+                f"study storage {path!r}: skipped {bad} unreadable "
+                f"record(s) (torn write or corruption); resuming from "
+                f"{len(self.trials)} intact trial(s)"
+                + (" and repairing the torn tail on next persist"
+                   if torn_tail else ""),
+                RuntimeWarning, stacklevel=2)
+            if torn_tail:
+                self._repair_to = intact_end
         # Rebuild the distribution registry from the persisted trials so
         # grid-position bookkeeping (GridSampler's mixed-radix sweep)
         # continues where the crashed run stopped instead of restarting.
@@ -100,11 +135,31 @@ class Study:
         if not self.storage:
             return
         os.makedirs(os.path.dirname(self.storage) or ".", exist_ok=True)
+        line = json.dumps({"kind": "trial", "trial": trial.to_dict()}) + "\n"
+        line = faults.fault_point("study.persist", line)
+        if line is faults.DROP:
+            return
+        if self._repair_to is not None:
+            # Truncate the torn tail _load found before appending over
+            # it.  Only the study-owning process appends to its storage
+            # (executors tell in the parent), so truncating under the
+            # file lock cannot drop a sibling's record.
+            offset, self._repair_to = self._repair_to, None
+            with open(self.storage, "r+b") as f:
+                how = lock_file(f, self.storage)
+                try:
+                    f.truncate(offset)
+                    f.seek(0, os.SEEK_END)
+                    f.write(line.encode())
+                    f.flush()
+                    os.fsync(f.fileno())
+                finally:
+                    unlock_file(f, how)
+            return
         # Lock-safe append: serialized against sibling threads by the study
         # lock (callers hold it) and against other processes sharing the
         # storage file by the flock inside locked_append.
-        locked_append(self.storage,
-                      json.dumps({"kind": "trial", "trial": trial.to_dict()}) + "\n")
+        locked_append(self.storage, line)
 
     # -- ask / tell -------------------------------------------------------------
 
