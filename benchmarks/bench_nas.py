@@ -1227,6 +1227,155 @@ def bench_kernel_tune(quick: bool = False) -> None:
          f"best_match={best_match}")
 
 
+# ---------------------------------------------------------------------------
+# serve group: exploration -> serving hand-off through the
+# content-addressed artifact store.  A warm boot (same cache dir the
+# exploration populated) must perform ZERO XLA compiles; a cold boot of
+# the same report against an empty store pays the compile — the delta is
+# what the store is for.
+# ---------------------------------------------------------------------------
+
+SERVE_EXPERIMENT = {
+    "name": "bench-serve",
+    "search_space": {
+        "input": [2, 64],
+        "output": 3,
+        "sequence": [
+            {"block": "features", "op_candidates": "conv1d",
+             "conv1d": {"kernel_size": [3, 5], "out_channels": [4, 8]}},
+            {"block": "head", "op_candidates": "linear",
+             "linear": {"width": [8, 16]}},
+        ],
+    },
+    "sampler": {"name": "random", "seed": 7},
+    "executor": {"backend": "serial"},
+    "criteria": [
+        {"estimator": "p99_latency_s", "kind": "objective", "weight": 1.0},
+        {"estimator": "throughput_tok_s", "kind": "objective",
+         "direction": "maximize", "weight": 1e-6},
+    ],
+    "serving": {
+        "max_batch": 2, "queue_limit": 4,
+        "traffic": {"seed": 3, "n_requests": 16, "arrival": "poisson",
+                    "rate_rps": 50.0, "prompt_lens": [4, 8], "gen_lens": 4},
+    },
+}
+
+
+def run_serve_explore(cache_dir: str, report_dir: str, trials: int) -> dict:
+    """Subprocess mode: one exploration under serving criteria, report +
+    artifact store persisted for the boot configurations to consume."""
+    from repro import Explorer, ExperimentSpec
+    from repro.hwgen.generator import generate_call_count
+
+    spec = ExperimentSpec.from_dict({
+        **SERVE_EXPERIMENT, "cache": cache_dir, "report_dir": report_dir,
+        "budget": {"n_trials": trials},
+    })
+    t0 = time.perf_counter()
+    report = Explorer.from_spec(spec).run()
+    return {
+        "seconds": time.perf_counter() - t0,
+        "compiles": generate_call_count(),
+        "artifacts": (report.artifacts or {}).get("entries", 0),
+        "report": report.artifact,
+    }
+
+
+def _run_serve_boot(report_path: str) -> dict:
+    """Boot ``repro.launch.serve --from-report`` in a fresh interpreter
+    (compile counters are process-local) and parse its JSON summary."""
+    import json
+    import os
+    import subprocess
+    import sys
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = {**os.environ}
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(repo, "src"), repo] + env.get("PYTHONPATH", "").split(os.pathsep))
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve",
+         "--from-report", report_path],
+        capture_output=True, text=True, env=env, timeout=1800)
+    if r.returncode != 0:
+        raise RuntimeError(f"serve boot failed:\n{r.stderr[-4000:]}")
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+def bench_serve(quick: bool = False) -> None:
+    """Exploration -> serving hand-off.  What must hold: (1) the warm
+    boot — same cache dir the exploration populated — performs ZERO XLA
+    compiles and serves the full declared traffic; (2) the cold boot of
+    the same report over an emptied store compiles at least once; (3)
+    both boots serve the identical winning signature."""
+    import json
+    import shutil
+    import tempfile
+
+    trials = 6 if quick else 12
+    cache_dir = tempfile.mkdtemp(prefix="bench-serve-cache-")
+    report_dir = tempfile.mkdtemp(prefix="bench-serve-report-")
+    cold_cache = tempfile.mkdtemp(prefix="bench-serve-cold-")
+    try:
+        explore = _run_serve_subprocess(cache_dir, report_dir, trials)
+        emit("serve/explore", explore["seconds"] / trials,
+             f"compiles={explore['compiles']};artifacts={explore['artifacts']}")
+
+        warm = _run_serve_boot(explore["report"])
+        if warm["compiles"] != 0:
+            raise AssertionError(
+                f"warm boot performed {warm['compiles']} XLA compile(s); the "
+                f"artifact store must make it zero")
+        if warm["served"] != warm["traffic"]["n_requests"]:
+            raise AssertionError(
+                f"warm boot served {warm['served']} of "
+                f"{warm['traffic']['n_requests']} requests")
+
+        # cold boot: same report, but pointed at an empty store
+        with open(explore["report"]) as f:
+            report = json.load(f)
+        report["spec"]["cache"]["dir"] = cold_cache
+        cold_path = explore["report"] + ".cold.json"
+        with open(cold_path, "w") as f:
+            json.dump(report, f)
+        cold = _run_serve_boot(cold_path)
+        if cold["compiles"] < 1:
+            raise AssertionError("cold boot compiled nothing — the warm "
+                                 "measurement is not measuring the store")
+        if cold["signature"] != warm["signature"]:
+            raise AssertionError(
+                f"boots served different programs: {cold['signature']} vs "
+                f"{warm['signature']}")
+        emit("serve/warm_boot", warm["boot_s"],
+             f"compiles=0;served={warm['served']};shed={warm['shed']};"
+             f"speedup_vs_cold={cold['boot_s'] / max(warm['boot_s'], 1e-9):.2f}x")
+        emit("serve/cold_boot", cold["boot_s"],
+             f"compiles={cold['compiles']};served={cold['served']}")
+    finally:
+        shutil.rmtree(cache_dir, ignore_errors=True)
+        shutil.rmtree(report_dir, ignore_errors=True)
+        shutil.rmtree(cold_cache, ignore_errors=True)
+
+
+def _run_serve_subprocess(cache_dir: str, report_dir: str, trials: int) -> dict:
+    import json
+    import os
+    import subprocess
+    import sys
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = {**os.environ}
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(repo, "src"), repo] + env.get("PYTHONPATH", "").split(os.pathsep))
+    cmd = [sys.executable, os.path.abspath(__file__), "--serve-explore",
+           cache_dir, report_dir, str(trials)]
+    r = subprocess.run(cmd, capture_output=True, text=True, env=env, timeout=1800)
+    if r.returncode != 0:
+        raise RuntimeError(f"serve exploration failed:\n{r.stderr[-4000:]}")
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
 def bench_faults(quick: bool = False) -> None:
     """Fault-injection hot-path cost.  The contract: with no plan
     installed, every ``fault_point`` call is one global load + ``is
@@ -1282,6 +1431,7 @@ def main() -> None:
     bench_cascade()
     bench_async_scheduler()
     bench_kernel_tune()
+    bench_serve()
     bench_faults()
     bench_parallel_engine()
     bench_process_engine()
@@ -1308,13 +1458,20 @@ if __name__ == "__main__":
         import json
 
         print(json.dumps(run_kernel_tune_config(sys.argv[2])))
+    elif len(sys.argv) == 5 and sys.argv[1] == "--serve-explore":
+        # subprocess mode for bench_serve: emit one JSON line
+        import json
+
+        print(json.dumps(run_serve_explore(sys.argv[2], sys.argv[3],
+                                           int(sys.argv[4]))))
     elif "--quick" in sys.argv[1:]:
-        # CI mode: the scheduler + cascade + kernel-tune groups, small
-        # sizes, so scheduler, screening, and schedule-tuning regressions
-        # surface in every PR log
+        # CI mode: the scheduler + cascade + kernel-tune + serve groups,
+        # small sizes, so scheduler, screening, schedule-tuning, and
+        # serving-hand-off regressions surface in every PR log
         bench_async_scheduler(quick=True)
         bench_cascade(quick=True)
         bench_kernel_tune(quick=True)
+        bench_serve(quick=True)
         bench_faults(quick=True)
     else:
         main()

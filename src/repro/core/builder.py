@@ -66,6 +66,16 @@ class BuiltModel:
     def n_params(self) -> int:
         return sum(l.n_params for l in self.layers)
 
+    @property
+    def state_elems_per_token(self) -> int:
+        """Decode-state elements that grow with context (K/V caches)."""
+        return sum(l.state_elems_per_token for l in self.layers)
+
+    @property
+    def state_elems_fixed(self) -> int:
+        """Context-length-independent decode-state elements (SSM state)."""
+        return sum(l.state_elems_fixed for l in self.layers)
+
     def summary(self) -> str:
         rows = [f"input  {self.input_shape}"]
         for l in self.layers:

@@ -39,6 +39,11 @@ class BuiltLayer:
     out_format: str
     flops: int = 0  # fwd FLOPs per example (analytical estimate)
     n_params: int = 0
+    # decode-state footprint per sequence, in *elements* (the serving
+    # estimators scale by the declared cache dtype): grows-with-context
+    # state (attention K/V) vs fixed-size state (SSM recurrent state)
+    state_elems_per_token: int = 0
+    state_elems_fixed: int = 0
 
 
 class LayerBuilder(abc.ABC):
@@ -331,6 +336,7 @@ class AttentionBuilder(LayerBuilder):
             out_format="BLC",
             flops=2 * l * (4 * c * c) + 4 * l * l * c,
             n_params=4 * c * c,
+            state_elems_per_token=2 * c,  # K + V rows per cached token
         )
 
 
@@ -375,4 +381,10 @@ class SSMBuilder(LayerBuilder):
             out_format="BLC",
             flops=2 * l * n_params + 6 * l * cfg.d_inner * cfg.d_state,
             n_params=n_params,
+            # recurrent state is context-length independent: SSD state
+            # (heads, d_state, d_head) + rolling conv window
+            state_elems_fixed=(
+                cfg.n_heads * cfg.d_state * cfg.d_head
+                + (cfg.conv_width - 1) * (cfg.d_inner + 2 * cfg.n_groups * cfg.d_state)
+            ),
         )

@@ -321,6 +321,22 @@ register_env(EnvVar(
 ))
 
 register_env(EnvVar(
+    name="REPRO_ARTIFACTS",
+    parse=_flag,
+    expected="a flag (`0`/`false` disables, anything else enables)",
+    description=(
+        "Whether disk-cached explorations also persist *compiled "
+        "executables* into the content-addressed artifact store "
+        "(`<cache.dir>/artifacts/`), which is what lets `python -m "
+        "repro.launch.serve --from-report` boot with zero XLA compiles.  "
+        "`0`/`false` keeps executables memory-only (the pre-store "
+        "behaviour): scalar values still persist, serving recompiles."),
+    default="enabled",
+    malformed="not applicable — every non-blank value parses as a flag",
+    consulted_by="`repro/evaluation/artifact_store.py`",
+))
+
+register_env(EnvVar(
     name="REPRO_QUARANTINE_DEATHS",
     parse=_positive_int,
     expected="a positive integer",

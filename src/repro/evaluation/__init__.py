@@ -12,6 +12,7 @@ from repro.evaluation.cascade import (
     FidelityStage,
     KeepRule,
 )
+from repro.evaluation.artifact_store import ArtifactStore
 from repro.evaluation.disk_cache import DiskEvaluationCache
 from repro.evaluation.estimators import (
     ActivationMemoryEstimator,
@@ -22,3 +23,10 @@ from repro.evaluation.estimators import (
     TrainedAccuracyEstimator,
 )
 from repro.evaluation.proxies import GradNormEstimator, SynFlowEstimator
+from repro.evaluation.serving import (
+    DecodeLatencyEstimator,
+    KVCachePeakBytesEstimator,
+    P99LatencyEstimator,
+    PrefillLatencyEstimator,
+    ThroughputEstimator,
+)

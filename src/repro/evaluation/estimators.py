@@ -100,6 +100,17 @@ class _CompiledEstimator(Estimator):
             cache = EvaluationCache(disk=cache)
         self.cache = cache
         self.tuner = tuner
+        # a disk-tiered cache also gets the content-addressed executable
+        # store: compiled programs persist next to the scalar values, so
+        # a server booting --from-report after this exploration performs
+        # zero XLA compiles (REPRO_ARTIFACTS=0 opts out)
+        self.artifacts = None
+        if cache.disk is not None:
+            from repro.evaluation.artifact_store import (
+                ArtifactStore, store_enabled)
+
+            if store_enabled():
+                self.artifacts = ArtifactStore(cache.disk.path)
 
     def _program_key(self, name: str, candidate: BuiltModel, sig=None):
         """Key for chip-independent, compile-derived values: scoped by
@@ -172,9 +183,23 @@ class _CompiledEstimator(Estimator):
         x = jnp.zeros((self.batch, l, c), jnp.float32)
         params = candidate.init(jax.random.PRNGKey(0))
         key = self._program_key("artifact", candidate, sig)
-        artifact = self.generator.generate_cached(
-            self.cache, key, candidate.apply, (params, x),
-            schedules=schedules)
+
+        def produce():
+            # store read-through first: a previous process's compile (or
+            # a sibling worker's) loads as a deserialized executable and
+            # never touches the XLA compiler; writes go through so the
+            # next process warm-loads what this one paid for
+            if self.artifacts is not None:
+                loaded = self.artifacts.get(key, target=self.generator.target)
+                if loaded is not None:
+                    return loaded
+            generated = self.generator.generate(
+                candidate.apply, (params, x), schedules=schedules)
+            if self.artifacts is not None:
+                self.artifacts.put(key, generated)
+            return generated
+
+        artifact = self.cache.get_or_compute(key, produce)
         target = self.generator.target
         if artifact.target is not target:
             # the cached artifact was compiled by a sibling target sharing

@@ -321,8 +321,8 @@ class CriterionSpec:
         "limit": "constraint threshold; required for both constraint "
                  "kinds, ignored for objectives",
         "params": "estimator constructor kwargs, validated against its "
-                  "signature at parse time (`target`, `cache`, and "
-                  "`tuner` are injected by the Explorer)",
+                  "signature at parse time (`target`, `cache`, `tuner`, "
+                  "and `serving` are injected by the Explorer)",
     }
 
     @classmethod
@@ -352,11 +352,11 @@ class CriterionSpec:
         if kind != "objective" and limit is None:
             raise ExperimentError(f"{where}: kind {kind!r} requires a 'limit'")
         params = _require_mapping(raw.get("params") or {}, f"{where}.params")
-        # target/cache/tuner are injected by the Explorer; everything else
-        # must bind against the estimator constructor
+        # target/cache/tuner/serving are injected by the Explorer;
+        # everything else must bind against the estimator constructor
         probe = dict(params)
         sig_params = inspect.signature(factory).parameters
-        for injected in ("target", "cache", "tuner"):
+        for injected in ("target", "cache", "tuner", "serving"):
             if injected in sig_params:
                 probe.setdefault(injected, None)
         _check_component_kwargs(factory, probe, where)
@@ -379,15 +379,15 @@ class CriterionSpec:
         return d
 
     def build_estimator(self, target: Any = None, cache: Any = None,
-                        tuner: Any = None):
+                        tuner: Any = None, serving: Any = None):
         """Instantiate the estimator, injecting the experiment's hardware
-        target, shared cache, and kernel-schedule tuner wherever the
-        constructor accepts them."""
+        target, shared cache, kernel-schedule tuner, and serving spec
+        wherever the constructor accepts them."""
         factory = ESTIMATORS.get(self.estimator)
         kwargs = dict(self.params)
         sig_params = inspect.signature(factory).parameters
         for name, value in (("target", target), ("cache", cache),
-                            ("tuner", tuner)):
+                            ("tuner", tuner), ("serving", serving)):
             if name in sig_params and name not in kwargs and value is not None:
                 kwargs[name] = value
         return factory(**kwargs)
@@ -750,10 +750,85 @@ class FaultsSpec:
         return d
 
 
+@dataclasses.dataclass
+class ServingSpec:
+    """Traffic-shaped serving criteria: how the engine batches and what
+    load it sees.  Injected into estimators that accept a ``serving``
+    kwarg (the :mod:`repro.evaluation.serving` family), so sweeps rank
+    candidates by p99 latency / throughput *under the declared traffic
+    mix* rather than single-request kernel time; the same section drives
+    ``python -m repro.launch.serve`` so the measured engine and the
+    estimators model the same configuration."""
+
+    traffic: "Any" = None  # TrafficSpec; default built in __post_init__
+    max_batch: int = 8
+    queue_limit: int = 16
+    dtype_bytes: int = 2
+
+    KEYS = ("traffic", "max_batch", "queue_limit", "dtype_bytes")
+    FIELD_DOCS = {
+        "traffic": "declared traffic mix (see table below): seeded "
+                   "arrival process + prompt/generation length mixes; "
+                   "replays bit-identically at a fixed seed",
+        "max_batch": "continuous-batching concurrency limit — the engine "
+                     "decodes at most this many requests per step "
+                     "(integer >= 1, default 8)",
+        "queue_limit": "bounded admission queue depth; arrivals beyond it "
+                       "are shed gracefully (integer >= 1, default 16)",
+        "dtype_bytes": "bytes per decode-cache element (2 = bf16 default, "
+                       "4 = f32); scales `kv_cache_peak_bytes` and the "
+                       "decode-state bandwidth term",
+    }
+
+    def __post_init__(self):
+        from repro.launch.traffic import TrafficSpec
+
+        if self.traffic is None:
+            self.traffic = TrafficSpec()
+
+    @classmethod
+    def from_raw(cls, raw: Any, where: str = "serving"
+                 ) -> Optional["ServingSpec"]:
+        from repro.launch.traffic import TrafficError, TrafficSpec
+
+        if raw is None:
+            return None
+        raw = _require_mapping(raw, where)
+        _check_keys(raw, set(cls.KEYS), where)
+        try:
+            traffic = TrafficSpec.from_raw(raw.get("traffic"),
+                                           f"{where}.traffic")
+        except TrafficError as e:
+            raise ExperimentError(str(e)) from None
+        max_batch = int(raw.get("max_batch", 8))
+        if max_batch < 1:
+            raise ExperimentError(
+                f"{where}: max_batch must be >= 1, got {max_batch}")
+        queue_limit = int(raw.get("queue_limit", 16))
+        if queue_limit < 1:
+            raise ExperimentError(
+                f"{where}: queue_limit must be >= 1, got {queue_limit}")
+        dtype_bytes = int(raw.get("dtype_bytes", 2))
+        if dtype_bytes not in (1, 2, 4, 8):
+            raise ExperimentError(
+                f"{where}: dtype_bytes must be one of (1, 2, 4, 8), "
+                f"got {dtype_bytes}")
+        return cls(traffic=traffic, max_batch=max_batch,
+                   queue_limit=queue_limit, dtype_bytes=dtype_bytes)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "traffic": self.traffic.to_dict(),
+            "max_batch": self.max_batch,
+            "queue_limit": self.queue_limit,
+            "dtype_bytes": self.dtype_bytes,
+        }
+
+
 TOP_LEVEL_KEYS = (
     "name", "search_space", "sampler", "executor", "schedule", "criteria",
     "fidelity", "kernel_tuning", "target", "cache", "persistence", "budget",
-    "pruner", "scalarize", "report_dir", "faults",
+    "pruner", "scalarize", "report_dir", "faults", "serving",
 )
 
 # descriptions for the top-level experiment document, rendered into
@@ -793,6 +868,11 @@ TOP_LEVEL_DOCS = {
     "faults": "optional deterministic fault injection (see table below): "
               "a seeded chaos schedule installed for the run and "
               "inherited by spawned process workers via `REPRO_FAULTS`",
+    "serving": "optional serving configuration (see table below): "
+               "continuous-batching limits plus a seeded traffic mix; "
+               "injected into the traffic-shaped estimators "
+               "(`p99_latency_s`, `throughput_tok_s`, ...) and recorded "
+               "in the report for `repro.launch.serve --from-report`",
 }
 
 
@@ -842,6 +922,7 @@ class ExperimentSpec:
     fidelity: Optional[FidelitySpec] = None
     kernel_tuning: Optional[KernelTuningSpec] = None
     faults: Optional[FaultsSpec] = None
+    serving: Optional[ServingSpec] = None
     scalarize: bool = True
     report_dir: str = "results"
 
@@ -927,6 +1008,7 @@ class ExperimentSpec:
             fidelity=fidelity,
             kernel_tuning=KernelTuningSpec.from_raw(raw.get("kernel_tuning")),
             faults=FaultsSpec.from_raw(raw.get("faults")),
+            serving=ServingSpec.from_raw(raw.get("serving")),
             scalarize=scalarize,
             report_dir=str(raw.get("report_dir", "results")),
         )
@@ -969,6 +1051,8 @@ class ExperimentSpec:
             d["kernel_tuning"] = self.kernel_tuning.to_dict()
         if self.faults is not None:
             d["faults"] = self.faults.to_dict()
+        if self.serving is not None:
+            d["serving"] = self.serving.to_dict()
         return d
 
     # -- derived views ---------------------------------------------------------

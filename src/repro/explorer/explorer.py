@@ -98,7 +98,8 @@ class SpecObjective:
 
             def build_criterion(c):
                 return OptimizationCriteria(
-                    c.build_estimator(target=target, cache=cache, tuner=tuner),
+                    c.build_estimator(target=target, cache=cache, tuner=tuner,
+                                      serving=spec.serving),
                     kind=c.kind, direction=c.direction,
                     weight=c.weight, limit=c.limit,
                 )
@@ -329,6 +330,10 @@ class ExplorationReport:
     # actually produced this report must travel with it or cross-target
     # comparisons stop being interpretable
     target: Optional[Dict[str, Any]] = None
+    # content-addressed executable store summary (directory + entry
+    # count) when the experiment had a disk cache: everything a server
+    # needs to warm-boot --from-report with zero XLA compiles
+    artifacts: Optional[Dict[str, Any]] = None
     # the complete experiment spec, so the report self-describes and a
     # sweep can detect that a persisted cell still matches its spec
     spec: Optional[Dict[str, Any]] = None
@@ -583,6 +588,17 @@ class Explorer:
             "tune_time_s": sum(c["tuner_tune_time_s"] for c in per_pid.values()),
         }
 
+    def _artifacts_report(self) -> Optional[Dict[str, Any]]:
+        """Executable-store summary: where the compiled programs live and
+        how many the exploration persisted (what serve --from-report
+        warm-loads).  None without a disk cache tier."""
+        from repro.evaluation.artifact_store import ArtifactStore, store_enabled
+
+        if self.spec.cache.dir is None or not store_enabled():
+            return None
+        store = ArtifactStore(self.spec.cache.dir)
+        return {"dir": store.path, "entries": len(store)}
+
     def _build_report(self, wall_clock: float) -> ExplorationReport:
         from repro.evaluation.disk_cache import toolchain_versions
 
@@ -613,6 +629,7 @@ class Explorer:
             cache=_aggregate_cache_stats(study.trials),
             fidelity=self._fidelity_report(),
             kernel_tuning=self._kernel_tuning_report(),
+            artifacts=self._artifacts_report(),
             wall_clock_s=wall_clock,
             toolchain=toolchain_versions(),
             target=TARGETS.get(spec.target).to_dict(),

@@ -131,6 +131,7 @@ def ensure_builtins() -> None:
     _builtins_loaded = True
     import repro.evaluation.estimators  # noqa: F401
     import repro.evaluation.proxies  # noqa: F401
+    import repro.evaluation.serving  # noqa: F401
     import repro.hwgen.targets  # noqa: F401
     import repro.search.executors  # noqa: F401
     import repro.search.pruners  # noqa: F401

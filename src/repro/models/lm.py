@@ -109,6 +109,33 @@ def _sub_cache_init(sub: SubBlock, batch, max_seq, enc_len, dtype):
     return {}
 
 
+def _sub_prefill(sub: SubBlock, params, x, cache, pos_offset):
+    """Full-sequence forward that also fills the decode cache.
+
+    Attention runs through the same full-sequence kernel dispatch as
+    :func:`attention_apply` and writes the whole prompt's K/V in one
+    shot.  Recurrent kinds (mamba2/mlstm/slstm) ingest the prompt with a
+    ``lax.scan`` of their decode step — one compiled program, batched
+    over the prompt, and bitwise identical to the token-by-token loop it
+    replaces.  Returns (y (B,S,d), new_cache).
+    """
+    if sub.kind == "attention":
+        return attn.attention_prefill(params, sub.cfg, x, cache, pos_offset)
+    if sub.kind == "cross_attention":
+        return attn.cross_attention_cached(params, sub.cfg, x, cache), cache
+    if sub.kind == "mlp":
+        return mlp_mod.mlp_apply(params, sub.cfg, x), cache
+    if sub.kind == "moe":
+        return moe_mod.moe_apply(params, sub.cfg, x), cache
+
+    def body(carry, x_t):
+        y_t, new_carry = _sub_decode(sub, params, x_t[:, None], carry, 0)
+        return new_carry, y_t[:, 0]
+
+    new_cache, ys = jax.lax.scan(body, cache, x.transpose(1, 0, 2))
+    return ys.transpose(1, 0, 2), new_cache
+
+
 def _sub_decode(sub: SubBlock, params, x, cache, pos):
     """Returns (y, new_cache)."""
     if sub.kind == "attention":
@@ -374,14 +401,79 @@ class LM:
             h = h + y
         return h, new_cache
 
+    def _layer_prefill(self, layer: LayerSpec, params, cache, h, pos_offset):
+        new_cache = {}
+        for i, sub in enumerate(layer.subs):
+            sp = params[f"sub_{i}"]
+            x = NORM_APPLY[self.spec.norm](sp["norm"], h)
+            y, new_cache[f"sub_{i}"] = _sub_prefill(
+                sub, sp["inner"], x, cache[f"sub_{i}"], pos_offset)
+            h = h + y
+        return h, new_cache
+
+    def prefill(self, params, cache, tokens, pos_offset=0):
+        """Batched prefill: the whole prompt in one full-sequence forward
+        that also fills the decode caches.  tokens: (B, S) int32.
+
+        Returns (logits (B, S, vocab), new_cache); decoding continues
+        from ``pos = pos_offset + S`` with :meth:`decode`.  Replaces the
+        token-by-token ``decode`` loop over the prompt (quadratic in
+        prompt length, and meaningless to measure prefill latency on).
+        """
+        h = self._embed(params, tokens, None)
+        s = tokens.shape[1]
+        if self.spec.positional == "learned":
+            pe = jax.lax.dynamic_slice_in_dim(
+                params["pos_embed"], pos_offset, s, axis=0)
+            h = h + pe[None].astype(h.dtype)
+        new_cache: Dict[str, Any] = {}
+        shared_idx = 0
+        for seg in self.segments:
+            if seg.kind == "shared":
+                key = f"shared_{shared_idx}"
+                h, new_cache[key] = self._layer_prefill(
+                    seg.spec, params["shared"], cache[key], h, pos_offset)
+                shared_idx += 1
+                continue
+
+            def body(carry, inp, _seg=seg):
+                lp, lc = inp
+                out, nc = self._layer_prefill(_seg.spec, lp, lc, carry, pos_offset)
+                return out, nc
+
+            if seg.count == 1:
+                take0 = lambda t: jax.tree_util.tree_map(lambda x: x[0], t)
+                h, nc = body(h, (take0(params[seg.name]), take0(cache[seg.name])))
+                new_cache[seg.name] = jax.tree_util.tree_map(lambda x: x[None], nc)
+            elif not self.spec.scan_layers:
+                takei = lambda t, i: jax.tree_util.tree_map(lambda x: x[i], t)
+                ncs = []
+                for i in range(seg.count):
+                    h, nc = body(h, (takei(params[seg.name], i), takei(cache[seg.name], i)))
+                    ncs.append(nc)
+                new_cache[seg.name] = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *ncs)
+            else:
+                h, new_cache[seg.name] = jax.lax.scan(
+                    body, h, (params[seg.name], cache[seg.name])
+                )
+            h = constrain(h, ("batch", None, None))
+        return self._head(params, h), new_cache
+
     def decode(self, params, cache, tokens, pos):
-        """One-step decode.  tokens: (B, 1) int32; pos: scalar int32.
+        """One-step decode.  tokens: (B, 1) int32; pos: scalar int32 or
+        an int32 vector (B,) of per-sequence positions (continuous
+        batching: each serving slot decodes at its own depth).
 
         Returns (logits (B, 1, vocab), new_cache).
         """
         h = self._embed(params, tokens, None)
+        pos = jnp.asarray(pos, jnp.int32)
         if self.spec.positional == "learned":
-            h = h + jax.lax.dynamic_slice_in_dim(params["pos_embed"], pos, 1, axis=0)[None].astype(h.dtype)
+            if pos.ndim == 1:
+                pe = jnp.take(params["pos_embed"], pos, axis=0)[:, None]
+            else:
+                pe = jax.lax.dynamic_slice_in_dim(params["pos_embed"], pos, 1, axis=0)[None]
+            h = h + pe.astype(h.dtype)
         new_cache: Dict[str, Any] = {}
         shared_idx = 0
         for seg in self.segments:

@@ -291,23 +291,78 @@ def cross_attention_cached(params, cfg: AttentionConfig, x, cache):
     return jnp.einsum("bsh,hd->bsd", out, params["wo"])
 
 
+def attention_prefill(params, cfg: AttentionConfig, x, cache, pos_offset=0):
+    """Batched prefill: full-sequence attention through the same kernel
+    dispatch as :func:`attention_apply` (pallas flash / xla_chunked /
+    grouped), writing the prompt's K/V into the preallocated cache in one
+    shot instead of token-by-token.  x: (B,S,d_model); the prompt
+    occupies cache positions ``[pos_offset, pos_offset+S)``.
+
+    Returns (y (B,S,d_model), new_cache) — bitwise the same cache a
+    ``attention_decode`` loop over the prompt would produce, at
+    full-sequence kernel cost (see tests/test_serving.py).
+    """
+    b, s, _ = x.shape
+    positions = (pos_offset + jnp.arange(s))[None]
+    q, k, v = _project_qkv(params, cfg, x, x, positions, positions)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), pos_offset, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), pos_offset, axis=1)
+    if cfg.impl == "pallas" and pos_offset == 0:
+        from repro.kernels import ops as kops
+
+        out = kops.flash_attention(
+            q, k, v, causal=cfg.causal, window=cfg.window, scale=cfg.scale)
+    elif cfg.impl == "xla_chunked" and pos_offset == 0:
+        kv_chunk = min(cfg.kv_chunk, s)
+        while s % kv_chunk:
+            kv_chunk //= 2
+        out = chunked_attention(
+            q, k, v, cfg.scale, causal=cfg.causal, window=cfg.window,
+            kv_chunk=max(kv_chunk, 1), unroll=cfg.scan_unroll)
+    else:
+        # pos_offset > 0 (chunked prompt ingestion) attends against the
+        # cache prefix, which the flash/chunked paths don't slice yet
+        t = pos_offset + s
+        mask = make_mask(s, t, cfg.causal, cfg.window, q_offset=pos_offset)
+        k_pfx = jax.lax.dynamic_slice_in_dim(k_cache, 0, t, axis=1)
+        v_pfx = jax.lax.dynamic_slice_in_dim(v_cache, 0, t, axis=1)
+        out = grouped_attention(q, k_pfx.astype(q.dtype),
+                                v_pfx.astype(q.dtype), mask, cfg.scale)
+    out = out.reshape(b, s, cfg.n_heads * cfg.head_dim)
+    y = jnp.einsum("bsh,hd->bsd", out, params["wo"])
+    return y, {"k": k_cache, "v": v_cache}
+
+
 def attention_decode(params, cfg: AttentionConfig, x, cache, pos):
-    """One-token decode.  x: (B,1,d_model); pos: scalar int32 (same for batch).
+    """One-token decode.  x: (B,1,d_model); pos: scalar int32, or an
+    int32 vector (B,) of *per-sequence* positions (continuous batching:
+    each serving slot decodes at its own depth).
 
     Updates ``cache`` in place (functionally) and attends to positions
     ``<= pos`` (within the sliding window when configured).
     """
     b = x.shape[0]
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    per_slot = pos.ndim == 1
+    positions = pos[:, None] if per_slot else jnp.full((b, 1), pos, jnp.int32)
     q, k_new, v_new = _project_qkv(params, cfg, x, x, positions, positions)
-    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), pos, axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), pos, axis=1)
+    if per_slot:
+        # scatter one (K,Dh) row per sequence at that sequence's position
+        rows = jnp.arange(b)
+        k_cache = cache["k"].at[rows, pos].set(k_new[:, 0].astype(cache["k"].dtype))
+        v_cache = cache["v"].at[rows, pos].set(v_new[:, 0].astype(cache["v"].dtype))
+    else:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), pos, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), pos, axis=1)
     t = k_cache.shape[1]
     kj = jnp.arange(t)
-    valid = kj <= pos
+    valid = kj[None, :] <= positions if per_slot else (kj <= pos)[None, :]
     if cfg.window is not None:
-        valid &= kj > pos - cfg.window
-    mask = valid[None, None, None, None, :]  # (1,1,1,1,T)
+        wfloor = positions - cfg.window if per_slot else pos - cfg.window
+        valid &= kj[None, :] > wfloor
+    mask = valid[:, None, None, None, :]  # (B or 1, 1,1,1,T)
     out = grouped_attention(q, k_cache.astype(q.dtype), v_cache.astype(q.dtype), mask, cfg.scale)
     out = out.reshape(b, 1, cfg.n_heads * cfg.head_dim)
     y = jnp.einsum("bsh,hd->bsd", out, params["wo"])

@@ -32,16 +32,8 @@ from repro.explorer.registry import ESTIMATORS
 from repro.hwgen.generator import generate_call_count
 from repro.search.study import HardConstraintViolated
 
-TINY_SPACE = {
-    "input": [2, 64],
-    "output": 3,
-    "sequence": [
-        {"block": "features", "op_candidates": "conv1d",
-         "conv1d": {"kernel_size": [3, 5], "out_channels": [4, 8]}},
-        {"block": "head", "op_candidates": "linear",
-         "linear": {"width": [8, 16]}},
-    ],
-}
+# the canonical tiny space shared with the cross-backend parity matrix
+from test_parity_matrix import CANONICAL_SPACE as TINY_SPACE
 
 CASCADE_EXPERIMENT = {
     "name": "cascade-tiny",

@@ -29,17 +29,10 @@ from repro.explorer.registry import (
 from repro.search import Study, TPESampler
 
 # the tiny conv1d space: 2 blocks, a handful of distributions — fast to
-# sample, fast to build, no compilation needed for analytic criteria
-TINY_SPACE = {
-    "input": [2, 64],
-    "output": 3,
-    "sequence": [
-        {"block": "features", "op_candidates": "conv1d",
-         "conv1d": {"kernel_size": [3, 5], "out_channels": [4, 8]}},
-        {"block": "head", "op_candidates": "linear",
-         "linear": {"width": [8, 16]}},
-    ],
-}
+# sample, fast to build, no compilation needed for analytic criteria.
+# Shared with the cross-backend parity matrix so every parity check in
+# the suite runs the same spec.
+from test_parity_matrix import CANONICAL_SPACE as TINY_SPACE
 
 BASE_EXPERIMENT = {
     "name": "tiny",

@@ -1,0 +1,159 @@
+"""The canonical cross-backend parity matrix.
+
+One experiment spec — the canonical tiny conv1d/linear space ranked by
+the traffic-shaped ``p99_latency_s`` criterion — runs through every
+execution mode the framework offers:
+
+    {serial, process, remote-loopback} x {flat, cascade} x
+    {kernel_tuning: off, cached}
+
+and every cell must find the *identical* best trial (params and values)
+as the serial reference for its (mode, kernel_tuning) pair.  This file
+is also the single home of the shared tiny search space: the scattered
+parity checks in ``test_explorer.py`` / ``test_cascade.py`` /
+``test_remote.py`` import :data:`CANONICAL_SPACE` and
+:func:`canonical_experiment` from here instead of re-declaring their
+own copies.
+
+All cells share one disk cache (and its content-addressed artifact
+store), so the matrix also exercises the warm path: the first cell to
+evaluate a program compiles it, every later cell warm-loads it — and
+must still report the same numbers.
+"""
+import copy
+
+import pytest
+
+from repro import Explorer
+
+CANONICAL_SPACE = {
+    "input": [2, 64],
+    "output": 3,
+    "sequence": [
+        {"block": "features", "op_candidates": "conv1d",
+         "conv1d": {"kernel_size": [3, 5], "out_channels": [4, 8]}},
+        {"block": "head", "op_candidates": "linear",
+         "linear": {"width": [8, 16]}},
+    ],
+}
+
+# the serving section every cell ranks under: small seeded poisson mix
+CANONICAL_SERVING = {
+    "max_batch": 2,
+    "queue_limit": 4,
+    "traffic": {"seed": 5, "n_requests": 12, "arrival": "poisson",
+                "rate_rps": 100.0, "prompt_lens": [4, 8],
+                "gen_lens": [2, 4]},
+}
+
+
+def canonical_experiment(tmp_path, *, mode="flat", backend="serial",
+                         kernel_tuning="off", workers=None,
+                         cache_dir=None, seed=7, **overrides):
+    """The one tiny experiment the whole parity suite agrees on."""
+    raw = {
+        "name": f"parity-{mode}-{backend}-{kernel_tuning}",
+        "search_space": copy.deepcopy(CANONICAL_SPACE),
+        "sampler": {"name": "random", "seed": seed},
+        "executor": {"backend": backend,
+                     "n_workers": 1 if backend == "serial" else 2},
+        "criteria": [
+            {"estimator": "p99_latency_s", "kind": "objective",
+             "weight": 1.0},
+            {"estimator": "n_params", "kind": "objective", "weight": 1e-9},
+        ],
+        "serving": copy.deepcopy(CANONICAL_SERVING),
+        "budget": {"n_trials": 8},
+        "report_dir": str(tmp_path / "results"),
+    }
+    if backend == "remote":
+        raw["executor"]["workers"] = list(workers)
+        raw["schedule"] = {"mode": "sliding_window"}
+    if kernel_tuning != "off":
+        raw["kernel_tuning"] = {"mode": kernel_tuning}
+    if cache_dir is not None:
+        raw["cache"] = {"dir": str(cache_dir)}
+    if mode == "cascade":
+        raw["fidelity"] = {
+            "generation": 4,
+            "stages": [
+                {"name": "zero_cost",
+                 "criteria": [{"estimator": "synflow", "kind": "objective",
+                               "direction": "minimize"}],
+                 "keep": {"top_frac": 0.5}},
+            ],
+        }
+    raw.update(overrides)
+    return raw
+
+
+def run_cell(tmp_path, cache_dir, backend, mode, kernel_tuning,
+             workers=None):
+    raw = canonical_experiment(
+        tmp_path, mode=mode, backend=backend, kernel_tuning=kernel_tuning,
+        workers=workers, cache_dir=cache_dir)
+    report = Explorer.from_dict(raw).run(save_report=False)
+    return {
+        "best_number": report.best["number"],
+        "best_params": report.best["params"],
+        "best_values": report.best["values"],
+        "best_signature": report.best["signature"],
+        "states": report.states,
+    }
+
+
+@pytest.fixture(scope="module")
+def cache_dir(tmp_path_factory):
+    # one disk cache for the whole matrix: later cells warm-load the
+    # compiled programs (and artifact-store blobs) earlier cells produced
+    return str(tmp_path_factory.mktemp("parity-cache"))
+
+
+@pytest.fixture(scope="module")
+def pool():
+    from repro.search.remote.worker import WorkerServer
+
+    servers = [WorkerServer() for _ in range(2)]
+    addrs = []
+    for s in servers:
+        host, port = s.start()
+        addrs.append(f"{host}:{port}")
+    yield addrs
+    for s in servers:
+        s.stop()
+
+
+@pytest.fixture(scope="module")
+def refs(tmp_path_factory, cache_dir):
+    """Lazily-computed serial reference per (mode, kernel_tuning)."""
+    store = {}
+
+    def get(mode, kernel_tuning):
+        key = (mode, kernel_tuning)
+        if key not in store:
+            store[key] = run_cell(
+                tmp_path_factory.mktemp(f"ref-{mode}-{kernel_tuning}"),
+                cache_dir, "serial", mode, kernel_tuning)
+        return store[key]
+
+    return get
+
+
+@pytest.mark.parametrize("kernel_tuning", ("off", "cached"))
+@pytest.mark.parametrize("mode", ("flat", "cascade"))
+@pytest.mark.parametrize("backend", ("serial", "process", "remote"))
+def test_parity_cell(tmp_path, cache_dir, refs, pool, backend, mode,
+                     kernel_tuning):
+    workers = pool if backend == "remote" else None
+    cell = run_cell(tmp_path, cache_dir, backend, mode, kernel_tuning,
+                    workers=workers)
+    assert cell == refs(mode, kernel_tuning)
+
+
+def test_reference_cells_rank_by_p99(refs):
+    """The serial references really did rank on the serving criterion:
+    the winning scalarized value is dominated by p99_latency_s."""
+    for mode in ("flat", "cascade"):
+        ref = refs(mode, "off")
+        assert ref["best_values"][0] > 0.0
+        assert ref["best_signature"].startswith("conv1d(")

@@ -138,6 +138,62 @@ def test_moe_output_finite_and_gate_normalized(seed):
 
 
 # ---------------------------------------------------------------------------
+# artifact store: canonical keys collide iff the content is equal
+# ---------------------------------------------------------------------------
+
+from repro.evaluation.artifact_store import ArtifactStore, content_hash
+
+# small component pools so hypothesis actually generates equal pairs: the
+# property is an iff, and both directions need coverage
+_NAMES = st.sampled_from(["latency_s", "peak_bytes", "roofline_terms",
+                          "serving_sim"])
+_SCOPES = st.sampled_from(["1x1", "2x1", "2x4"])
+_BATCHES = st.sampled_from([1, 2, 8])
+_SIGNATURES = st.sampled_from([
+    "conv1d(kernel_size=3,out_channels=4)|linear(width=8)",
+    "conv1d(kernel_size=5,out_channels=4)|linear(width=8)",
+    "conv1d(kernel_size=3,out_channels=4)|linear(width=16)",
+])
+_SCHEDULES = st.sampled_from([None, "ssm_scan:chunk=64", "ssm_scan:chunk=128"])
+
+
+@st.composite
+def program_keys(draw):
+    key = (draw(_NAMES), draw(_SCOPES), draw(_BATCHES), draw(_SIGNATURES))
+    sched = draw(_SCHEDULES)
+    if sched is not None:
+        key = key + (("sched", sched),)
+    return key
+
+
+@settings(max_examples=60, deadline=None)
+@given(k1=program_keys(), k2=program_keys())
+def test_store_keys_equal_iff_content_equal(k1, k2):
+    """Two program keys share a store entry iff every component —
+    estimator name, mesh scope, batch, full architecture signature, and
+    effective schedule signature — is equal.  A collision here is the
+    wrong-executable-served class of bug; a spurious mismatch is a
+    silent recompile."""
+    c1, c2 = ArtifactStore.canonical(k1), ArtifactStore.canonical(k2)
+    assert c1 is not None and c2 is not None
+    assert (c1 == c2) == (k1 == k2)
+    # blob addressing follows the same identity
+    assert (content_hash(c1) == content_hash(c2)) == (k1 == k2)
+    # and the canonical form is deterministic
+    assert ArtifactStore.canonical(k1) == c1
+
+
+@settings(max_examples=20, deadline=None)
+@given(k=program_keys(), where=st.integers(0, 3))
+def test_store_key_with_uncacheable_component_is_unstorable(k, where):
+    """Any None component (an uncacheable candidate) makes the whole key
+    unstorable — the store must refuse rather than hash a partial
+    identity."""
+    broken = tuple(None if i == where else v for i, v in enumerate(k))
+    assert ArtifactStore.canonical(broken) is None
+
+
+# ---------------------------------------------------------------------------
 # optimizer: zero grads + no weight decay = fixed point
 # ---------------------------------------------------------------------------
 

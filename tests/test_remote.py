@@ -430,16 +430,8 @@ def test_executor_spec_workers_plumbing():
 # sweep-cell scheduler: fan cells across the pool, resume still works
 # ---------------------------------------------------------------------------
 
-TINY_SPACE = {
-    "input": [2, 64],
-    "output": 3,
-    "sequence": [
-        {"block": "features", "op_candidates": "conv1d",
-         "conv1d": {"kernel_size": [3, 5], "out_channels": [4, 8]}},
-        {"block": "head", "op_candidates": "linear",
-         "linear": {"width": [8, 16]}},
-    ],
-}
+# the canonical tiny space shared with the cross-backend parity matrix
+from test_parity_matrix import CANONICAL_SPACE as TINY_SPACE
 
 
 def _tiny_sweep(tmp_path):

@@ -108,10 +108,12 @@ def test_train_driver_resume_after_kill(tmp_path):
 
 def test_serve_driver(tmp_path):
     r = _run([sys.executable, "-m", "repro.launch.serve", "--arch", "xlstm-1.3b",
-              "--smoke", "--batch", "2", "--prompt-len", "8", "--gen", "6"])
+              "--smoke", "--requests", "2", "--max-batch", "2",
+              "--prompt-lens", "8", "--gen-lens", "6"])
     assert r.returncode == 0, r.stderr[-2000:]
     out = json.loads(r.stdout.strip().splitlines()[-1])
-    assert out["generated_shape"] == [2, 6]
+    assert out["served"] == 2 and out["shed"] == 0
+    assert out["tokens_generated"] == 2 * 6
 
 
 def test_train_with_compression():
